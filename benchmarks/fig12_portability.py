@@ -1,0 +1,35 @@
+"""Paper Fig. 12 + §4.2: portability — the same DiT deployment sustains high
+utilization on an A100-sized SoftHier instance AND the GH200-sized one, while
+CUTLASS utilization (external reference) drops from A100 to GH200."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import (A100_REF_UTIL_COMPUTE, COMPUTE_BOUND,
+                               GH200_REF_UTIL_COMPUTE, csv_row)
+from repro.core.autotuner import tune
+from repro.hw.config import softhier_a100, softhier_gh200
+
+
+def run() -> List[str]:
+    rows = []
+    for hw, ref_util, ref_name in ((softhier_a100(), A100_REF_UTIL_COMPUTE, "A100"),
+                                   (softhier_gh200(), GH200_REF_UTIL_COMPUTE, "GH200")):
+        utils = []
+        for shape in COMPUTE_BOUND[:4]:
+            t0 = time.perf_counter()
+            res = tune(shape, hw, elem_bytes=hw.tile.elem_bytes,
+                       max_candidates=16)
+            us = (time.perf_counter() - t0) * 1e6
+            util = res.report.utilization(hw)
+            utils.append(util)
+            rows.append(csv_row(
+                f"fig12.{hw.name}.M{shape.m}N{shape.n}K{shape.k}", us,
+                f"util={util*100:.1f}%;ref_{ref_name}_cutlass={ref_util*100:.0f}%"))
+        avg = sum(utils) / len(utils)
+        rows.append(csv_row(
+            f"fig12.{hw.name}.avg", 0.0,
+            f"util={avg*100:.1f}%;cutlass_ref={ref_util*100:.0f}%;"
+            f"sustains={'yes' if avg > 0.5 else 'below-ref'}"))
+    return rows

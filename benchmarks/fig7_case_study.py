@@ -1,0 +1,121 @@
+"""Paper Fig. 7 (a-d): the GEMM case-study plots, reproduced on the SoftHier
+GH200-class instance via the DiT cost model.
+
+7a — layout + dataflow roofline movement (baseline/SUMMA x base/optimal layout)
+7b — dataflow pattern comparison across shape regimes
+7c — 2-D SUMMA vs 3-D split-K on the irregular-N shape
+7d — cluster-dimension remap on the flat GEMM
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List
+
+from benchmarks.common import csv_row
+from repro.core.layout import base_layout
+from repro.core.schedule import GEMMShape, Schedule, Tiling, build_program
+from repro.hw.config import softhier_gh200
+from repro.sim.perf import estimate
+
+HW = softhier_gh200()
+SHAPE_IRREG = GEMMShape(4096, 2112, 7168)       # paper's compute-intensive case
+SHAPE_FLAT = GEMMShape(64, 2112, 7168)          # paper's flat/decode case
+SHAPE_STORE = GEMMShape(16384, 32768, 512)      # paper's store-intensive case
+
+
+def _run(sched: Schedule):
+    t0 = time.perf_counter()
+    prog = build_program(sched, HW)
+    rep = estimate(prog, HW)
+    return rep, (time.perf_counter() - t0) * 1e6
+
+
+def fig7a() -> List[str]:
+    rows = []
+    base_lay = {m: base_layout(s, 128, 128, HW.hbm.n_channels)
+                for m, s in (("A", (4096, 7168)), ("B", (7168, 2112)),
+                             ("C", (4096, 2112)))}
+    cases = [
+        ("baseline_w/o_layout", Schedule(SHAPE_IRREG, Tiling(32, 32, 1, tk=128),
+                                         "baseline", elem_bytes=1,
+                                         layouts=base_lay)),
+        ("baseline_w_layout", Schedule(SHAPE_IRREG, Tiling(32, 32, 1, tk=128),
+                                       "baseline", elem_bytes=1)),
+        ("summa_w/o_layout", Schedule(SHAPE_IRREG, Tiling(32, 32, 1, tk=128),
+                                      "summa", elem_bytes=1, layouts=base_lay)),
+        ("summa_w_layout", Schedule(SHAPE_IRREG, Tiling(32, 32, 1, tk=128),
+                                    "summa", elem_bytes=1)),
+    ]
+    for name, sched in cases:
+        rep, us = _run(sched)
+        rows.append(csv_row(
+            f"fig7a.{name}", us,
+            f"AI={rep.intensity:.0f};TFLOPS={rep.achieved_flops/1e12:.0f};"
+            f"util={rep.utilization(HW)*100:.1f}%"))
+    return rows
+
+
+def fig7b() -> List[str]:
+    rows = []
+    for regime, shape, tk in (("compute", SHAPE_IRREG, 128),
+                              ("store", SHAPE_STORE, 128)):
+        iters = (1, 1) if regime == "compute" else (4, 8)
+        for df, stages in (("summa", 1), ("summa", 4), ("systolic", 1),
+                           ("systolic_over_summa", 1), ("summa_over_systolic", 1)):
+            t = Tiling(32, 32, 1, iter_m=iters[0], iter_n=iters[1], tk=tk)
+            try:
+                rep, us = _run(Schedule(shape, t, df, elem_bytes=1,
+                                        store_stages=stages))
+                rows.append(csv_row(
+                    f"fig7b.{regime}.{df}.st{stages}", us,
+                    f"TFLOPS={rep.achieved_flops/1e12:.0f};"
+                    f"util={rep.utilization(HW)*100:.1f}%"))
+            except ValueError as e:
+                rows.append(csv_row(f"fig7b.{regime}.{df}.st{stages}", 0.0,
+                                    f"illegal:{str(e)[:40]}"))
+    return rows
+
+
+def fig7c() -> List[str]:
+    rows = []
+    cases = [
+        ("2d_summa_tn66", Schedule(SHAPE_IRREG, Tiling(32, 32, 1, tk=128),
+                                   "summa", elem_bytes=1)),
+        ("3d_splitk_tn264", Schedule(SHAPE_IRREG, Tiling(32, 8, 4, tk=256),
+                                     "splitk_summa", elem_bytes=1)),
+        ("3d_splitk_tn528", Schedule(SHAPE_IRREG, Tiling(32, 4, 8, tk=128),
+                                     "splitk_summa", elem_bytes=1, acc_bytes=2)),
+    ]
+    for name, sched in cases:
+        rep, us = _run(sched)
+        rows.append(csv_row(
+            f"fig7c.{name}", us,
+            f"TFLOPS={rep.achieved_flops/1e12:.0f};"
+            f"util={rep.utilization(HW)*100:.1f}%"))
+    return rows
+
+
+def fig7d() -> List[str]:
+    rows = []
+    cases = [
+        ("2d_summa_32x32", Schedule(SHAPE_FLAT, Tiling(32, 32, 1, tk=224),
+                                    "summa", elem_bytes=1)),
+        ("remap_3d_1x4x256", Schedule(SHAPE_FLAT, Tiling(1, 4, 256, tk=28),
+                                      "splitk_summa", elem_bytes=1)),
+    ]
+    reps = []
+    for name, sched in cases:
+        rep, us = _run(sched)
+        reps.append(rep)
+        rows.append(csv_row(
+            f"fig7d.{name}", us,
+            f"TFLOPS={rep.achieved_flops/1e12:.1f};"
+            f"bw_util={rep.bw_utilization(HW)*100:.1f}%"))
+    speedup = reps[0].total_time / reps[1].total_time
+    rows.append(csv_row("fig7d.remap_speedup", 0.0, f"x{speedup:.2f}"))
+    return rows
+
+
+def run() -> List[str]:
+    return fig7a() + fig7b() + fig7c() + fig7d()

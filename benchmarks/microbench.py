@@ -1,0 +1,61 @@
+"""Host microbenchmarks: the Pallas MMAD kernel (interpret mode, CPU) against
+the jnp oracle, the functional SoftHier simulator, and tiny-arch train-step
+wall time — the 'runs on a laptop' sanity row for each moving part."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, timeit
+
+
+def run() -> List[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # pallas mmad (interpret) vs oracle
+    a = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    from repro.kernels.mmad import mmad
+    from repro.kernels.ref import mmad_ref
+    us_k = timeit(lambda: jax.block_until_ready(
+        mmad(a, b, block_shape=(128, 128, 128), interpret=True)), reps=2)
+    us_r = timeit(lambda: jax.block_until_ready(mmad_ref(a, b)), reps=5)
+    rows.append(csv_row("micro.mmad_pallas_interpret_256", us_k, "CPU-interpret"))
+    rows.append(csv_row("micro.mmad_ref_256", us_r, "jnp-oracle"))
+
+    # functional simulator GEMM (verification path)
+    from repro.core.schedule import GEMMShape, Schedule, Tiling, build_program
+    from repro.hw.config import AcceleratorConfig, HBMConfig, NoCConfig, TileConfig
+    from repro.sim.softhier import run_gemm
+    hw = AcceleratorConfig(name="mini", grid=(4, 4),
+                           tile=TileConfig(l1_bytes=4 * 1024 * 1024),
+                           noc=NoCConfig(), hbm=HBMConfig(n_channels=8))
+    prog = build_program(Schedule(GEMMShape(64, 64, 128),
+                                  Tiling(4, 4, 1, tk=32), "summa"), hw)
+    am = rng.standard_normal((64, 128)).astype(np.float32)
+    bm = rng.standard_normal((128, 64)).astype(np.float32)
+    us_sim = timeit(lambda: run_gemm(prog, am, bm), reps=2)
+    rows.append(csv_row("micro.sim_functional_summa_4x4", us_sim, "numpy-BSP"))
+
+    # smoke train step
+    from repro.configs import smoke_config
+    from repro.models.model import init_params
+    from repro.optim import adamw
+    from repro.train.steps import make_train_step
+    cfg = smoke_config("olmo-1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ostate = adamw.init(params)
+    step = jax.jit(make_train_step(cfg, adamw.AdamWConfig()))
+    batch = {"tokens": jnp.zeros((4, 64), jnp.int32),
+             "targets": jnp.zeros((4, 64), jnp.int32)}
+    step(params, ostate, None, batch)   # compile
+    us_t = timeit(lambda: jax.block_until_ready(
+        step(params, ostate, None, batch)[3]["loss"]), reps=3)
+    rows.append(csv_row("micro.train_step_olmo_smoke", us_t,
+                        f"tok/s={4*64/(us_t/1e6):,.0f}"))
+    return rows

@@ -1,0 +1,39 @@
+"""Roofline benchmark: renders the §Roofline table from the dry-run artifacts
+(results/dryrun/*.json). Produces one CSV row per (arch x shape) cell with the
+three terms, the dominant bottleneck, and the MODEL_FLOPS ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from benchmarks.common import csv_row
+
+RESULTS = os.environ.get("DIT_DRYRUN_DIR", "results/dryrun")
+
+
+def run() -> List[str]:
+    rows = []
+    files = sorted(glob.glob(os.path.join(RESULTS, "*__sp.json")))
+    if not files:
+        return [csv_row("roofline.missing", 0.0,
+                        f"no dry-run artifacts under {RESULTS}")]
+    for path in files:
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") != "ok" or "roofline" not in r:
+            rows.append(csv_row(
+                f"roofline.{r.get('arch')}.{r.get('shape')}", 0.0,
+                f"status={r.get('status')}:{str(r.get('error'))[:60]}"))
+            continue
+        rf = r["roofline"]
+        acc = r["accounting"]
+        rows.append(csv_row(
+            f"roofline.{r['arch']}.{r['shape']}", r.get("elapsed_s", 0) * 1e6,
+            f"compute_s={rf['compute_s']:.4f};memory_s={rf['memory_s']:.4f};"
+            f"collective_s={rf['collective_s']:.4f};dominant={rf['dominant']};"
+            f"frac={rf['roofline_fraction']:.3f};"
+            f"useful={acc['useful_ratio']:.2f};"
+            f"peakGB={r['full']['peak_bytes_per_device']/1e9:.1f}"))
+    return rows

@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Figures 7/9/10/11/12 run the DiT
+schedules through the SoftHier cost model on the paper's hardware instances;
+microbench covers the host-executable pieces. The roofline benchmark reads
+the dry-run artifacts if present (results/dryrun)."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (fig7_case_study, fig9_11_gh200, fig12_portability,
+                            microbench)
+    modules = [
+        ("fig7", fig7_case_study),
+        ("fig9-11", fig9_11_gh200),
+        ("fig12", fig12_portability),
+        ("micro", microbench),
+    ]
+    try:
+        from benchmarks import roofline_table
+        modules.append(("roofline", roofline_table))
+    except ImportError:
+        pass
+    for name, mod in modules:
+        try:
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception as e:
+            print(f"{name}.ERROR,0.0,{type(e).__name__}:{str(e)[:120]}",
+                  flush=True)
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

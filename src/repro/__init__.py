@@ -1,0 +1,3 @@
+"""repro: Design in Tiles (DiT) — automated GEMM deployment for tile-based
+many-PE accelerators, reproduced and retargeted to TPU pods in JAX."""
+__version__ = "1.0.0"

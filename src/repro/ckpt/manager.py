@@ -1,0 +1,141 @@
+"""Fault-tolerant checkpointing (DESIGN.md §5).
+
+Atomic: a checkpoint is written to `step_N.tmp/` and renamed to `step_N/`
+only when complete — a crash mid-write can never corrupt the latest
+checkpoint. Sharded: each host writes only its own arrays (here: one host).
+Elastic: restore() re-device_puts onto whatever mesh/shardings the new run
+uses, so a checkpoint taken on one mesh shape restores onto another.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten(tree: Any) -> Tuple[List[np.ndarray], Any, List[str]]:
+    leaves, treedef = jax.tree.flatten(tree)
+    arrs = [np.asarray(l) for l in leaves]
+    dtypes = [str(a.dtype) for a in arrs]
+    # numpy's npz format can't round-trip ml_dtypes (bfloat16 etc.): store
+    # them as raw uint16/uint8 views and restore via the manifest dtype.
+    def encode(a: np.ndarray) -> np.ndarray:
+        if a.dtype.kind not in "fiub?":
+            width = a.dtype.itemsize
+            return a.view({1: np.uint8, 2: np.uint16, 4: np.uint32}[width])
+        return a
+    return [encode(a) for a in arrs], treedef, dtypes
+
+
+def _decode(a: np.ndarray, dtype_str: str) -> np.ndarray:
+    if str(a.dtype) != dtype_str:
+        import ml_dtypes
+        return a.view(np.dtype(getattr(ml_dtypes, dtype_str, dtype_str)))
+    return a
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._async_thread: Optional[threading.Thread] = None
+
+    # -- paths ---------------------------------------------------------------
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}")
+
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except (IndexError, ValueError):
+                    continue
+        return max(steps) if steps else None
+
+    # -- save ------------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
+             blocking: bool = True) -> None:
+        # snapshot to host memory synchronously (consistent view), write async
+        arrs, treedef, dtypes = _flatten(tree)
+        meta = {"step": step, "n_arrays": len(arrs), "dtypes": dtypes,
+                "treedef": str(treedef), "extra": extra or {}}
+
+        def write():
+            final = self._step_dir(step)
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            np.savez(os.path.join(tmp, "arrays.npz"),
+                     **{f"a{i}": a for i, a in enumerate(arrs)})
+            with open(os.path.join(tmp, _MANIFEST), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)          # atomic publish
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            if self._async_thread is not None:
+                self._async_thread.join()
+            self._async_thread = threading.Thread(target=write, daemon=True)
+            self._async_thread.start()
+
+    def wait(self) -> None:
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(s for s in (self.latest_step(),) if s is not None)
+        all_steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.dir)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in all_steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -- restore -----------------------------------------------------------------
+
+    def restore(self, step: int, like: Any,
+                shardings: Optional[Any] = None) -> Any:
+        """Restore into the structure of `like`; device_put with `shardings`
+        if given (elastic re-mesh on load)."""
+        d = self._step_dir(step)
+        with open(os.path.join(d, _MANIFEST)) as f:
+            meta = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        arrs = [_decode(data[f"a{i}"], meta["dtypes"][i])
+                for i in range(meta["n_arrays"])]
+        leaves, treedef = jax.tree.flatten(like)
+        if len(leaves) != len(arrs):
+            raise ValueError(f"checkpoint has {len(arrs)} arrays, "
+                             f"expected {len(leaves)}")
+        for got, want in zip(arrs, leaves):
+            if tuple(got.shape) != tuple(want.shape):
+                raise ValueError(f"shape mismatch {got.shape} vs {want.shape}")
+        tree = jax.tree.unflatten(treedef, arrs)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        else:
+            tree = jax.tree.map(
+                lambda a, w: jax.numpy.asarray(a, dtype=w.dtype), tree, like)
+        return tree
+
+    def restore_extra(self, step: int) -> Dict:
+        with open(os.path.join(self._step_dir(step), _MANIFEST)) as f:
+            return json.load(f)["extra"]

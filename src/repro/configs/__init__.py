@@ -1,0 +1,9 @@
+from repro.configs import (deepseek_moe_16b, deepseek_v2_236b, gemma_2b,
+                           olmo_1b, phi3_vision_4_2b, phi4_mini_3_8b,
+                           qwen3_14b, seamless_m4t_medium, xlstm_1_3b,
+                           zamba2_1_2b)
+from repro.configs.registry import (SHAPES, SUBQUADRATIC, cells, get_config,
+                                    list_archs, smoke_config)
+
+__all__ = ["SHAPES", "SUBQUADRATIC", "cells", "get_config", "list_archs",
+           "smoke_config"]

@@ -1,0 +1,22 @@
+"""DiT core: the paper's deployment-schedule abstraction, BSP IR, mask-based
+collective calculus, data-layout engine, dataflow pattern builders, autotuner,
+and the distributed `dit_gemm` for the TPU target."""
+from repro.core.schedule import GEMMShape, Schedule, Tiling, build_program
+from repro.core.masks import (MaskSpec, TileGroup, all_group, col_group,
+                              rect_group, row_group, strided_group)
+from repro.core.remap import ClusterRemap, candidate_remaps, flat_mask_group
+from repro.core.layout import (DataLayout, PlacementScheme, SplitScheme,
+                               base_layout, candidate_layouts, optimal_layout)
+from repro.core.ir import (BufferDecl, DMAOp, MMADOp, MulticastOp, P2POp,
+                           Program, ReduceOp, Superstep)
+
+__all__ = [
+    "GEMMShape", "Schedule", "Tiling", "build_program",
+    "MaskSpec", "TileGroup", "all_group", "col_group", "rect_group",
+    "row_group", "strided_group",
+    "ClusterRemap", "candidate_remaps", "flat_mask_group",
+    "DataLayout", "PlacementScheme", "SplitScheme", "base_layout",
+    "candidate_layouts", "optimal_layout",
+    "BufferDecl", "DMAOp", "MMADOp", "MulticastOp", "P2POp", "Program",
+    "ReduceOp", "Superstep",
+]

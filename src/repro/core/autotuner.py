@@ -1,0 +1,145 @@
+"""Schedule autotuner (paper §4.1.4: 'we iterate through our predefined
+schedule candidates, guided by the insights above, to automatically select the
+kernel achieving the best performance').
+
+Candidate enumeration walks the deployment-schedule space:
+  dataflow pattern x logical grid (gm, gn, gk) [cluster remap + 3-D split-K]
+  x K-chunk tk x double-buffering x store stages x data layouts,
+pruned by legality (divisibility, L1 capacity) and by the paper's insights
+(Insight 2: prefer multicast; Insight 3: 3-D tiling for irregular shapes;
+Insight 4: remap for flat GEMM). Each candidate is built into a BSP program
+and priced with the SoftHier performance model; the best schedule wins.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator, List, Optional, Tuple
+
+from repro.core.schedule import GEMMShape, Schedule, Tiling, build_program
+from repro.hw.config import AcceleratorConfig
+from repro.sim.perf import PerfReport, estimate
+
+
+@dataclasses.dataclass
+class TunedResult:
+    schedule: Schedule
+    report: PerfReport
+    candidates_tried: int
+    log: List[Tuple[str, float, float]]  # (describe, time, utilization)
+
+
+def _pow2_range(lo: int, hi: int) -> List[int]:
+    out = []
+    v = lo
+    while v <= hi:
+        out.append(v)
+        v *= 2
+    return out
+
+
+def _engine_friendly(tn: int, hw: AcceleratorConfig) -> float:
+    """Fraction of engine columns busy for an N-tile of size tn (alignment)."""
+    cc = hw.tile.ce_cols
+    return tn / (math.ceil(tn / cc) * cc)
+
+
+def enumerate_candidates(shape: GEMMShape, hw: AcceleratorConfig,
+                         dataflows: Optional[List[str]] = None,
+                         elem_bytes: int = 1,
+                         max_candidates: int = 256) -> Iterator[Schedule]:
+    """Legal schedule candidates, insight-ordered (most promising first)."""
+    rows, cols = hw.grid
+    n_tiles = rows * cols
+    dataflows = dataflows or ["summa", "splitk_summa", "systolic", "baseline"]
+
+    cands: List[Tuple[float, Schedule]] = []
+    # logical grids: gm * gn * gk == n_tiles, all powers of two.
+    for gk in _pow2_range(1, n_tiles):
+        rest = n_tiles // gk
+        if rest * gk != n_tiles:
+            continue
+        for gm in _pow2_range(1, rest):
+            gn = rest // gm
+            if gm * gn != rest:
+                continue
+            # macro-iteration factors keep per-tile tiles engine-sized
+            for iter_m in (1, 2, 4):
+                for iter_n in (1, 2, 4):
+                    if shape.m % (gm * iter_m) or shape.n % (gn * iter_n) or shape.k % gk:
+                        continue
+                    tm = shape.m // (gm * iter_m)
+                    tn = shape.n // (gn * iter_n)
+                    k_local = shape.k // gk
+                    if tm == 0 or tn == 0 or k_local == 0:
+                        continue
+                    for tk in (64, 128, 256, 512):
+                        if k_local % tk and k_local > tk:
+                            continue
+                        tk_eff = min(tk, k_local)
+                        # L1 feasibility pre-check: double-buffered A/B + fp32 C
+                        l1 = (2 * (tm * tk_eff + tk_eff * tn) * elem_bytes
+                              + tm * tn * 4)
+                        acc_bytes = 4
+                        if l1 > hw.tile.l1_bytes:
+                            # retry with fp16 accumulation (Insight-3 flat cases)
+                            l1 = (2 * (tm * tk_eff + tk_eff * tn) * elem_bytes
+                                  + tm * tn * 2)
+                            acc_bytes = 2
+                            if l1 > hw.tile.l1_bytes:
+                                continue
+                        for df in dataflows:
+                            if df in ("summa", "systolic", "baseline") and gk != 1:
+                                continue
+                            if df == "splitk_summa" and gk < 2:
+                                continue
+                            if df == "systolic" and (gm == 1 or gn == 1):
+                                continue
+                            # insight-based priority scoring (lower = better):
+                            # predicted engine utilization = M/N alignment x
+                            # K-pipeline ceiling TK/(TK+fill) — iteration 8 of
+                            # §Perf: the ceiling term is what surfaces deep-TK
+                            # schedules that tile-size-only scoring missed.
+                            fill = hw.tile.ce_rows + hw.tile.ce_cols
+                            eff_m = tm / (math.ceil(tm / hw.tile.ce_rows)
+                                          * hw.tile.ce_rows)
+                            ceil_k = tk_eff / (tk_eff + fill)
+                            score = -(_engine_friendly(tn, hw) * eff_m * ceil_k)
+                            score *= {"summa": 1.0, "splitk_summa": 0.98,
+                                      "systolic": 0.9, "baseline": 0.1}[df]
+                            cands.append((score, Schedule(
+                                shape=shape,
+                                tiling=Tiling(gm, gn, gk, iter_m, iter_n, tk_eff),
+                                dataflow=df, elem_bytes=elem_bytes,
+                                acc_bytes=acc_bytes)))
+    cands.sort(key=lambda sc: sc[0])
+    for _, sched in cands[:max_candidates]:
+        yield sched
+
+
+def tune(shape: GEMMShape, hw: AcceleratorConfig,
+         dataflows: Optional[List[str]] = None,
+         elem_bytes: int = 1,
+         max_candidates: int = 48,
+         store_stage_options: Tuple[int, ...] = (1, 4)) -> TunedResult:
+    """Build + price candidates; return the fastest schedule."""
+    best: Optional[Tuple[float, Schedule, PerfReport]] = None
+    log: List[Tuple[str, float, float]] = []
+    tried = 0
+    for base in enumerate_candidates(shape, hw, dataflows, elem_bytes,
+                                     max_candidates=max_candidates):
+        for stages in store_stage_options:
+            sched = dataclasses.replace(base, store_stages=stages)
+            try:
+                prog = build_program(sched, hw)
+            except (ValueError, KeyError):
+                continue
+            rep = estimate(prog, hw)
+            tried += 1
+            log.append((sched.describe(), rep.total_time, rep.utilization(hw)))
+            if best is None or rep.total_time < best[0]:
+                best = (rep.total_time, sched, rep)
+    if best is None:
+        raise RuntimeError(f"no legal schedule found for {shape} on {hw.name}")
+    return TunedResult(schedule=best[1], report=best[2],
+                       candidates_tried=tried, log=log)

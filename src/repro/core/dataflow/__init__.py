@@ -1,0 +1,3 @@
+from repro.core.dataflow import baseline, hierarchical, splitk, summa, systolic
+
+__all__ = ["baseline", "hierarchical", "splitk", "summa", "systolic"]

@@ -1,0 +1,215 @@
+"""Distributed `dit_gemm` — the paper's dataflow pattern primitives retargeted
+to a JAX device mesh (DESIGN.md §2.2 table).
+
+SoftHier's tile grid becomes the named mesh; its hardware NoC collectives
+become `jax.lax` collectives inside `shard_map`:
+
+- **summa** (Fig. 6a): K-panel loop; each step one-hot-psum-broadcasts the A
+  panel along the column axis and the B panel along the row axis (a psum of a
+  masked operand IS a fabric broadcast from the owner — the mask-based
+  multicast of §2.1), then accumulates the local C block.
+- **cannon** (Fig. 6b systolic): Cannon's algorithm — initial skew, then
+  rotate A west / B north with `ppermute` (nearest-neighbour ICI hops) and
+  accumulate. Square meshes.
+- **splitk** (Fig. 6e): K sharded; local partial GEMM then `psum_scatter`
+  (reduction ownership round-robined over the k-group — §3.1.1's reduction
+  policy; `psum` keeps a replicated C = the 'first'-owner policy analogue).
+- **allgather** (beyond-paper baseline): gather all panels once, single local
+  GEMM. Highest memory, fewest collectives — XLA's default TP pattern.
+- **auto**: sharding-constrained einsum; XLA chooses the collective schedule.
+
+All modes are numerically validated against each other on a multi-device CPU
+mesh (tests/test_gemm_modes.py, subprocess with fake devices).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+MODES = ("auto", "summa", "cannon", "splitk", "allgather")
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+# ---------------------------------------------------------------------------
+# SUMMA
+# ---------------------------------------------------------------------------
+
+def summa_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
+               row_axis: str = "data", col_axis: str = "model") -> jax.Array:
+    """C[i,j] = sum_p A_panel[i,p] @ B_panel[p,j] with owner broadcasts.
+
+    A is sharded (row_axis, col_axis), B (row_axis, col_axis), C likewise.
+    K is split into dm*dn panels so both operands agree on panel width.
+    """
+    dm, dn = _axis_size(mesh, row_axis), _axis_size(mesh, col_axis)
+    m, k = a.shape
+    _, n = b.shape
+    panels = dm * dn
+    if k % panels:
+        raise ValueError(f"K={k} must divide by {panels} SUMMA panels")
+    w = k // panels
+
+    def body(a_loc, b_loc):
+        # a_loc: (m/dm, k/dn) holds dm panels; b_loc: (k/dm, n/dn) holds dn.
+        i = jax.lax.axis_index(row_axis)
+        j = jax.lax.axis_index(col_axis)
+
+        def step(p, acc):
+            # A panel p lives on column p // dm at local offset (p % dm) * w
+            a_pan = jax.lax.dynamic_slice_in_dim(a_loc, (p % dm) * w, w, axis=1)
+            a_pan = jnp.where(j == p // dm, a_pan, jnp.zeros_like(a_pan))
+            a_pan = jax.lax.psum(a_pan, col_axis)          # owner broadcast
+            # B panel p lives on row p // dn at local offset (p % dn) * w
+            b_pan = jax.lax.dynamic_slice_in_dim(b_loc, (p % dn) * w, w, axis=0)
+            b_pan = jnp.where(i == p // dn, b_pan, jnp.zeros_like(b_pan))
+            b_pan = jax.lax.psum(b_pan, row_axis)          # owner broadcast
+            return acc + jnp.dot(a_pan, b_pan, preferred_element_type=jnp.float32)
+
+        acc = jnp.zeros((a_loc.shape[0], b_loc.shape[1]), dtype=jnp.float32)
+        acc = jax.lax.fori_loop(0, panels, step, acc)
+        return acc.astype(a_loc.dtype)
+
+    spec2 = P(row_axis, col_axis)
+    return shard_map(body, mesh=mesh, in_specs=(spec2, spec2),
+                     out_specs=spec2, check_rep=False)(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Cannon (systolic)
+# ---------------------------------------------------------------------------
+
+def cannon_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
+                row_axis: str = "data", col_axis: str = "model") -> jax.Array:
+    """Systolic GEMM on a square mesh: skew, then rotate-and-accumulate.
+
+    Every transfer is a single nearest-neighbour hop (`ppermute` ring) — the
+    wavefront dataflow of Fig. 6b on the ICI torus.
+    """
+    dm, dn = _axis_size(mesh, row_axis), _axis_size(mesh, col_axis)
+    if dm != dn:
+        raise ValueError(f"cannon needs a square mesh, got {dm}x{dn}")
+    nsteps = dm
+
+    left = [(s, (s - 1) % dn) for s in range(dn)]        # shift along cols
+    up = [(s, (s - 1) % dm) for s in range(dm)]          # shift along rows
+
+    def body(a_loc, b_loc):
+        i = jax.lax.axis_index(row_axis)
+        j = jax.lax.axis_index(col_axis)
+
+        # initial skew: A block (i, j) -> (i, j - i); B block (i, j) -> (i - j, j).
+        # every device executes the same dm-1 uniform ppermutes (SPMD-safe)
+        # and masks acceptance by its row/column index.
+        def skew_a(s, val):
+            shifted = jax.lax.ppermute(val, col_axis, left)
+            return jnp.where(i > s, shifted, val)
+
+        def skew_b(s, val):
+            shifted = jax.lax.ppermute(val, row_axis, up)
+            return jnp.where(j > s, shifted, val)
+
+        a_cur = jax.lax.fori_loop(0, nsteps - 1, skew_a, a_loc)
+        b_cur = jax.lax.fori_loop(0, nsteps - 1, skew_b, b_loc)
+
+        def step(s, carry):
+            a_cur, b_cur, acc = carry
+            acc = acc + jnp.dot(a_cur, b_cur, preferred_element_type=jnp.float32)
+            a_cur = jax.lax.ppermute(a_cur, col_axis, left)
+            b_cur = jax.lax.ppermute(b_cur, row_axis, up)
+            return a_cur, b_cur, acc
+
+        acc = jnp.zeros((a_loc.shape[0], b_loc.shape[1]), dtype=jnp.float32)
+        _, _, acc = jax.lax.fori_loop(0, nsteps, step, (a_cur, b_cur, acc))
+        return acc.astype(a_loc.dtype)
+
+    spec2 = P(row_axis, col_axis)
+    return shard_map(body, mesh=mesh, in_specs=(spec2, spec2),
+                     out_specs=spec2, check_rep=False)(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Split-K
+# ---------------------------------------------------------------------------
+
+def splitk_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
+                k_axis: str = "model", scatter: bool = True) -> jax.Array:
+    """K sharded over `k_axis`; local partial GEMM + NoC reduction.
+
+    scatter=True  -> psum_scatter: C row-blocks round-robined over the k-group
+                     (the paper's round_robin reduction-owner policy).
+    scatter=False -> psum: replicated C (every k-peer ends with the result).
+    """
+    dk = _axis_size(mesh, k_axis)
+    m = a.shape[0]
+    if scatter and m % dk:
+        raise ValueError(f"M={m} must divide by k-axis size {dk} for scatter")
+
+    def body(a_loc, b_loc):
+        part = jnp.dot(a_loc, b_loc, preferred_element_type=jnp.float32)
+        if scatter:
+            out = jax.lax.psum_scatter(part, k_axis, scatter_dimension=0,
+                                       tiled=True)
+        else:
+            out = jax.lax.psum(part, k_axis)
+        return out.astype(a_loc.dtype)
+
+    in_specs = (P(None, k_axis), P(k_axis, None))
+    out_specs = P(k_axis, None) if scatter else P(None, None)
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)(a, b)
+
+
+# ---------------------------------------------------------------------------
+# All-gather baseline + auto
+# ---------------------------------------------------------------------------
+
+def allgather_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
+                   row_axis: str = "data", col_axis: str = "model") -> jax.Array:
+    """Gather A's panels along cols / B's along rows once, then one local GEMM."""
+    def body(a_loc, b_loc):
+        a_full = jax.lax.all_gather(a_loc, col_axis, axis=1, tiled=True)
+        b_full = jax.lax.all_gather(b_loc, row_axis, axis=0, tiled=True)
+        return jnp.dot(a_full, b_full,
+                       preferred_element_type=jnp.float32).astype(a_loc.dtype)
+
+    spec2 = P(row_axis, col_axis)
+    return shard_map(body, mesh=mesh, in_specs=(spec2, spec2),
+                     out_specs=spec2, check_rep=False)(a, b)
+
+
+def auto_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
+              row_axis: str = "data", col_axis: str = "model") -> jax.Array:
+    """Sharding-constrained einsum: DiT picks the layout (split scheme), XLA
+    picks the collective schedule."""
+    spec2 = P(row_axis, col_axis)
+    a = jax.lax.with_sharding_constraint(a, NamedSharding(mesh, spec2))
+    b = jax.lax.with_sharding_constraint(b, NamedSharding(mesh, spec2))
+    out = jnp.einsum("mk,kn->mn", a, b, preferred_element_type=jnp.float32)
+    out = jax.lax.with_sharding_constraint(out, NamedSharding(mesh, spec2))
+    return out.astype(a.dtype)
+
+
+def dit_gemm(a: jax.Array, b: jax.Array, mesh: Mesh, mode: str = "auto",
+             row_axis: str = "data", col_axis: str = "model",
+             **kw) -> jax.Array:
+    """Dispatch on the deployment schedule's dataflow pattern."""
+    if mode == "auto":
+        return auto_gemm(a, b, mesh, row_axis, col_axis)
+    if mode == "summa":
+        return summa_gemm(a, b, mesh, row_axis, col_axis)
+    if mode == "cannon":
+        return cannon_gemm(a, b, mesh, row_axis, col_axis)
+    if mode == "splitk":
+        return splitk_gemm(a, b, mesh, k_axis=kw.get("k_axis", col_axis),
+                           scatter=kw.get("scatter", True))
+    if mode == "allgather":
+        return allgather_gemm(a, b, mesh, row_axis, col_axis)
+    raise KeyError(f"unknown mode {mode!r}; have {MODES}")

@@ -1,0 +1,144 @@
+"""Deployment-schedule abstraction (paper §3).
+
+A `Schedule` is the complete, parameterizable description DiT generates code
+from: (1) tiling & mapping — how the GEMM is decomposed over the logical tile
+grid, including 3-D split-K and cluster index remap; (2) data layout — split +
+placement schemes per matrix; (3) dataflow — which pattern primitive moves the
+data (baseline / SUMMA / systolic / hierarchical / split-K) and its knobs
+(double buffering, store pipeline stages).
+
+`build_program(schedule, hw)` dispatches to the dataflow builders and returns
+the BSP `Program` that the simulator executes and the cost model prices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+from repro.core import layout as layout_lib
+from repro.core.ir import Program
+from repro.core.remap import ClusterRemap
+from repro.hw.config import AcceleratorConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class GEMMShape:
+    m: int
+    n: int
+    k: int
+
+    def flops(self) -> int:
+        return 2 * self.m * self.n * self.k
+
+    def min_bytes(self, elem_bytes: int = 4) -> int:
+        """Compulsory HBM traffic: read A and B once, write C once."""
+        return elem_bytes * (self.m * self.k + self.k * self.n + self.m * self.n)
+
+    def intensity(self, elem_bytes: int = 4) -> float:
+        return self.flops() / self.min_bytes(elem_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class Tiling:
+    """3-D mapping of the GEMM onto the logical grid (paper §3.1).
+
+    The logical grid (gm x gn x gk) has gm*gn*gk == n_tiles. gk == 1 is 2-D
+    output-stationary tiling (one tile owns one output tile); gk > 1 is 3-D
+    split-K (gk tiles collaborate on one output tile and NoC-reduce partials).
+    iter_m/iter_n/iter_k sweep the grid over GEMMs bigger than one coverage.
+    """
+    gm: int
+    gn: int
+    gk: int = 1
+    iter_m: int = 1
+    iter_n: int = 1
+    tk: int = 128               # K-chunk per superstep (L1-resident)
+
+    def tile_dims(self, shape: GEMMShape) -> Tuple[int, int, int]:
+        """(TM, TN, K_local): the per-tile workload."""
+        tm = shape.m // (self.gm * self.iter_m)
+        tn = shape.n // (self.gn * self.iter_n)
+        k_local = shape.k // self.gk
+        return tm, tn, k_local
+
+    def validate(self, shape: GEMMShape, n_tiles: int) -> None:
+        if self.gm * self.gn * self.gk != n_tiles:
+            raise ValueError(f"{self.gm}x{self.gn}x{self.gk} != {n_tiles} tiles")
+        if shape.m % (self.gm * self.iter_m):
+            raise ValueError(f"M={shape.m} not divisible by gm*iter_m="
+                             f"{self.gm * self.iter_m}")
+        if shape.n % (self.gn * self.iter_n):
+            raise ValueError(f"N={shape.n} not divisible by gn*iter_n="
+                             f"{self.gn * self.iter_n}")
+        if shape.k % self.gk:
+            raise ValueError(f"K={shape.k} not divisible by gk={self.gk}")
+        k_local = shape.k // self.gk
+        if k_local % self.tk and k_local > self.tk:
+            raise ValueError(f"K_local={k_local} not divisible by tk={self.tk}")
+
+
+DATAFLOWS = ("baseline", "summa", "systolic", "systolic_over_summa",
+             "summa_over_systolic", "splitk_summa")
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """One point in DiT's deployment space."""
+    shape: GEMMShape
+    tiling: Tiling
+    dataflow: str = "summa"
+    remap: Optional[ClusterRemap] = None      # None -> identity (logical == physical)
+    # layouts keyed by matrix name; None -> optimal_layout for that matrix.
+    layouts: Optional[Dict[str, layout_lib.DataLayout]] = None
+    double_buffer: bool = True
+    # store pipeline stages for store-intensive cases (paper Insight 2 / Fig 8b)
+    store_stages: int = 1
+    # hierarchical schedules: inner group shape on the logical grid
+    inner: Tuple[int, int] = (2, 2)
+    # reduction-owner policy for split-K: which K-slice owner commits C
+    reduce_owner: str = "first"               # 'first' | 'round_robin'
+    elem_bytes: int = 4
+    # L1 accumulator precision (4 = fp32; 2 models fp16 accumulation, which
+    # the fp8 deployment needs for very large C tiles to fit 384 KB L1).
+    acc_bytes: int = 4
+
+    def describe(self) -> str:
+        t = self.tiling
+        r = f" remap={self.remap.logical}" if self.remap else ""
+        return (f"{self.dataflow}[{t.gm}x{t.gn}x{t.gk} iters=({t.iter_m},{t.iter_n}) "
+                f"tk={t.tk}]{r} db={int(self.double_buffer)} stages={self.store_stages}")
+
+
+def resolve_layouts(sched: Schedule, hw: AcceleratorConfig) -> Dict[str, layout_lib.DataLayout]:
+    """Fill in default (optimal) layouts for matrices the user didn't pin."""
+    tm, tn, k_local = sched.tiling.tile_dims(sched.shape)
+    tk = min(sched.tiling.tk, k_local)
+    shapes = {"A": (sched.shape.m, sched.shape.k),
+              "B": (sched.shape.k, sched.shape.n),
+              "C": (sched.shape.m, sched.shape.n)}
+    tiles = {"A": (tm, tk), "B": (tk, tn), "C": (tm, tn)}
+    out = dict(sched.layouts or {})
+    for mat, shp in shapes.items():
+        if mat not in out:
+            out[mat] = layout_lib.optimal_layout(shp, *tiles[mat], hw.hbm.n_channels)
+    return out
+
+
+def build_program(sched: Schedule, hw: AcceleratorConfig) -> Program:
+    """Dispatch to the dataflow pattern builders (paper §3.3.2)."""
+    from repro.core.dataflow import baseline, hierarchical, splitk, summa, systolic
+    sched.tiling.validate(sched.shape, hw.n_tiles)
+    builders = {
+        "baseline": baseline.build,
+        "summa": summa.build,
+        "systolic": systolic.build,
+        "systolic_over_summa": hierarchical.build_systolic_over_summa,
+        "summa_over_systolic": hierarchical.build_summa_over_systolic,
+        "splitk_summa": splitk.build,
+    }
+    if sched.dataflow not in builders:
+        raise KeyError(f"unknown dataflow {sched.dataflow!r}; have {DATAFLOWS}")
+    prog = builders[sched.dataflow](sched, hw)
+    prog.validate(l1_capacity=hw.tile.l1_bytes)
+    return prog

@@ -1,0 +1,140 @@
+"""Fault-tolerance runtime (DESIGN.md §5): crash-resume training loop,
+heartbeats, straggler mitigation, elastic re-mesh.
+
+The loop is deliberately simple and testable on one host:
+- every step's data is a pure function of the step index (repro.data), so
+  resume/elastic/straggler paths never replay or desynchronize;
+- checkpoints are atomic (repro.ckpt), saved every `ckpt_every` steps and on
+  failure the loop restores the latest one and continues;
+- a `FailureInjector` hook lets tests kill arbitrary steps to prove the
+  recovery path (tests/test_fault_tolerance.py);
+- heartbeats are per-host liveness files: a coordinator (or test) detects a
+  silent host by mtime staleness — the signal a real cluster manager would
+  use to trigger elastic down-scale, which here re-partitions the data
+  pipeline via `SyntheticLM.reshard` and re-device_puts params.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt.manager import CheckpointManager
+from repro.data.pipeline import SyntheticLM
+
+
+class Heartbeat:
+    def __init__(self, directory: str, host: int):
+        self.path = os.path.join(directory, f"host_{host}.hb")
+        os.makedirs(directory, exist_ok=True)
+
+    def beat(self) -> None:
+        with open(self.path, "w") as f:
+            f.write(str(time.time()))
+
+    @staticmethod
+    def stale_hosts(directory: str, timeout: float) -> list:
+        now = time.time()
+        stale = []
+        for name in sorted(os.listdir(directory)):
+            if name.endswith(".hb"):
+                mtime = os.path.getmtime(os.path.join(directory, name))
+                if now - mtime > timeout:
+                    stale.append(int(name.split("_")[1].split(".")[0]))
+        return stale
+
+
+class FailureInjector:
+    """Deterministically fail at given steps — once each (tests)."""
+
+    def __init__(self, fail_at: Optional[set] = None):
+        self.fail_at = set(fail_at or ())
+        self.failed = set()
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at and step not in self.failed:
+            self.failed.add(step)
+            raise RuntimeError(f"injected failure at step {step}")
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    max_restarts: int = 3
+    heartbeat_dir: Optional[str] = None
+    host: int = 0
+    # straggler mitigation: if a step takes > straggler_factor x the median,
+    # log it; with drop_straggler_batches the step is recomputed on fresh
+    # data instead of waiting (bounded staleness).
+    straggler_factor: float = 3.0
+    drop_straggler_batches: bool = False
+
+
+def run_training(step_fn: Callable, init_state: Any, data: SyntheticLM,
+                 loop: LoopConfig,
+                 make_batch_arrays: Callable[[Dict[str, np.ndarray]], Any],
+                 injector: Optional[FailureInjector] = None,
+                 on_metrics: Optional[Callable[[int, Dict], None]] = None
+                 ) -> Any:
+    """Crash-resumable loop. `step_fn(state, batch) -> (state, metrics)`.
+    `init_state` must be the freshly-initialized state pytree; if a
+    checkpoint exists the loop resumes from it."""
+    mgr = CheckpointManager(loop.ckpt_dir)
+    hb = Heartbeat(loop.heartbeat_dir, loop.host) if loop.heartbeat_dir else None
+
+    restarts = 0
+    state = init_state
+    start = 0
+    latest = mgr.latest_step()
+    if latest is not None:
+        state = mgr.restore(latest, state)
+        start = latest + 1
+
+    durations = []
+    step = start
+    while step < loop.total_steps:
+        try:
+            if injector is not None:
+                injector.maybe_fail(step)
+            t0 = time.monotonic()
+            batch = make_batch_arrays(data.batch(step))
+            state, metrics = step_fn(state, batch)
+            dt = time.monotonic() - t0
+            durations.append(dt)
+            med = float(np.median(durations[-20:]))
+            if dt > loop.straggler_factor * med and len(durations) > 5:
+                metrics = dict(metrics)
+                metrics["straggler"] = dt / med
+            if hb:
+                hb.beat()
+            if on_metrics:
+                on_metrics(step, metrics)
+            if (step + 1) % loop.ckpt_every == 0 or step + 1 == loop.total_steps:
+                mgr.save(step, state, extra={"time": time.time()})
+            step += 1
+        except Exception:
+            restarts += 1
+            if restarts > loop.max_restarts:
+                raise
+            latest = mgr.latest_step()
+            if latest is not None:
+                state = mgr.restore(latest, state)
+                step = latest + 1
+            else:
+                state = init_state
+                step = 0
+    return state
+
+
+def elastic_reshard(params: Any, new_mesh, shardings_fn) -> Any:
+    """Re-device_put a param tree onto a resized mesh (node loss/gain).
+    shardings_fn(shape_tree, mesh) -> shardings tree."""
+    shapes = jax.eval_shape(lambda: params)
+    shardings = shardings_fn(shapes, new_mesh)
+    return jax.tree.map(lambda a, s: jax.device_put(a, s), params, shardings)

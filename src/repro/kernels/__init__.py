@@ -1,0 +1,3 @@
+from repro.kernels import ops, ref
+from repro.kernels.mmad import mmad
+from repro.kernels.ops import tile_matmul

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel for the per-tile MMAD (paper Fig. 3b, adapted to TPU).
+
+On SoftHier a compute tile's matrix engine consumes L1-resident A/B tiles and
+accumulates C in L1. The TPU analogue: a Pallas kernel whose BlockSpec tiling
+streams (bm x bk) / (bk x bn) blocks HBM->VMEM (the placement-scheme tiles of
+§3.2.2), feeds the MXU, and keeps a float32 VMEM accumulator across the K
+grid dimension — Pallas's implicit pipelining of the grid is the paper's
+§3.3.1 double-buffered DMA/compute overlap.
+
+Block shapes default to MXU-aligned (128, 128, 128); the K loop is the
+innermost ("arbitrary") grid dimension so the accumulator scratch carries
+across it, while M/N are "parallel" dimensions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-specific bits; absent/new-API-shaped on some builds
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+    _COMPILER_PARAMS = getattr(pltpu, "CompilerParams",
+                               getattr(pltpu, "TPUCompilerParams", None))
+except ImportError:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+    _COMPILER_PARAMS = None
+
+
+def _mmad_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, out_dtype):
+    """One (i, j, k) grid step: acc += A[i,k] @ B[k,j]; flush at k == n_k-1."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_shape", "interpret", "out_dtype"))
+def mmad(a: jax.Array, b: jax.Array,
+         block_shape: Tuple[int, int, int] = (128, 128, 128),
+         interpret: bool = False,
+         out_dtype: Optional[jnp.dtype] = None) -> jax.Array:
+    """C = A @ B with VMEM-tiled blocks and a float32 accumulator.
+
+    Shapes must divide by the block shape (the ops.py wrapper pads otherwise).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {a.shape} @ {b.shape}")
+    bm, bn, bk = block_shape
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"shape ({m},{n},{k}) not divisible by blocks {block_shape}")
+    out_dtype = out_dtype or a.dtype
+    n_k = k // bk
+
+    if _VMEM is not None:
+        scratch = [_VMEM((bm, bn), jnp.float32)]
+    else:  # pragma: no cover
+        scratch = [jax.ShapeDtypeStruct((bm, bn), jnp.float32)]
+
+    kwargs = {}
+    if not interpret and _COMPILER_PARAMS is not None:
+        kwargs["compiler_params"] = _COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    kernel = functools.partial(_mmad_kernel, n_k=n_k, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **kwargs,
+    )(a, b)

@@ -1,0 +1,71 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+`tile_matmul` is the deployment entry point the model stack uses on TPU: it
+pads to MXU-aligned block multiples (the placement-scheme alignment of §3.2.2
+— irregular tiles are exactly what the paper's Insight 3 warns about), picks a
+block shape that fits VMEM, and dispatches to the `mmad` kernel. On CPU (this
+container) it routes through the pure-jnp oracle unless `interpret=True`
+Pallas execution is requested explicitly — numerics are identical.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.mmad import mmad
+
+# VMEM working-set budget for picking block shapes (bytes); a v5e has ~128 MB
+# but Pallas double-buffers every operand block, so stay well under.
+_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def _round_up(x: int, mult: int) -> int:
+    return (x + mult - 1) // mult * mult
+
+
+def pick_block_shape(m: int, n: int, k: int, elem_bytes: int = 2
+                     ) -> Tuple[int, int, int]:
+    """MXU-aligned block shape whose double-buffered working set fits VMEM.
+
+    This is the intra-chip analogue of the schedule abstraction's tiling
+    choice: prefer (128, 128, bk) with the largest bk that fits (larger K
+    chunks amortize the accumulator flush, the same effect as the paper's
+    larger TK on the matrix engine)."""
+    bm = min(128, _round_up(m, 8))
+    bn = min(128, _round_up(n, 128))
+    bk = 128
+    while True:
+        nxt = bk * 2
+        ws = (bm * nxt + nxt * bn) * elem_bytes * 2 + bm * bn * 4
+        if nxt <= k and ws <= _VMEM_BUDGET:
+            bk = nxt
+        else:
+            break
+    return bm, bn, min(bk, _round_up(k, 128))
+
+
+@functools.partial(jax.jit, static_argnames=("block_shape", "interpret", "use_kernel"))
+def tile_matmul(a: jax.Array, b: jax.Array,
+                block_shape: Optional[Tuple[int, int, int]] = None,
+                interpret: bool = False,
+                use_kernel: Optional[bool] = None) -> jax.Array:
+    """C = A @ B via the Pallas MMAD kernel with padding to block multiples."""
+    m, k = a.shape
+    _, n = b.shape
+    on_tpu = jax.default_backend() == "tpu"
+    if use_kernel is None:
+        use_kernel = on_tpu or interpret
+    if not use_kernel:
+        return ref.mmad_ref(a, b)
+
+    bs = block_shape or pick_block_shape(m, n, k, a.dtype.itemsize)
+    bm, bn, bk = bs
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    ap = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp != m or kp != k) else a
+    bp = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp != k or np_ != n) else b
+    out = mmad(ap, bp, block_shape=(bm, bn, bk), interpret=not on_tpu)
+    return out[:m, :n]

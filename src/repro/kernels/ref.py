@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mmad_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    """C = A @ B with float32 accumulation — the MMAD oracle."""
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def splitk_ref(a: jax.Array, b: jax.Array, splits: int, out_dtype=None) -> jax.Array:
+    """Split-K oracle: partial GEMMs over K slices, then a tree-sum — mirrors
+    the NoC reduction semantics (fp32 partials)."""
+    out_dtype = out_dtype or a.dtype
+    k = a.shape[-1]
+    assert k % splits == 0
+    ks = k // splits
+    parts = [jnp.dot(a[..., i * ks:(i + 1) * ks], b[i * ks:(i + 1) * ks, :],
+                     preferred_element_type=jnp.float32)
+             for i in range(splits)]
+    return sum(parts).astype(out_dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, scale: float | None = None) -> jax.Array:
+    """Softmax attention oracle (fp32 softmax), [heads, seq, head_dim]."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("...qd,...kd->...qk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        sq, sk = logits.shape[-2], logits.shape[-1]
+        mask = jnp.tril(jnp.ones((sq, sk), dtype=bool), k=sk - sq)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", probs.astype(v.dtype), v)

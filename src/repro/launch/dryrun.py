@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e + the §Roofline data source).
+
+For one (arch x shape x mesh) cell:
+1. FULL config: jit(step).lower(**input_specs).compile() on the production
+   mesh — memory_analysis() proves the sharded program fits; the compile
+   itself proves the collective schedule is coherent. Layer groups lower as
+   scans (small HLO).
+2. ACCOUNTING configs (1 and 2 layer-units, loop-free via accounting_mode):
+   cost_analysis() + collective-byte parsing give exact per-unit FLOPs/bytes,
+   extrapolated linearly to the full depth (XLA counts while bodies once —
+   verified — so the full-config numbers cannot be read directly).
+
+Each invocation handles one cell and appends JSON to --out (crash isolation;
+the sweep script loops and caches).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k \
+      [--multi-pod] [--skip-accounting] --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, cells, get_config, list_archs
+from repro.launch import flops as flops_lib
+from repro.launch.hlo_stats import collective_stats
+from repro.launch.input_specs import input_specs, param_shapes, cache_shapes
+from repro.launch.mesh import make_production_mesh
+from repro.models import accounting
+from repro.models.common import ModelConfig
+from repro.models.model import decode_step, forward
+from repro.optim import adamw
+from repro.parallel.spec_rules import (batch_spec, cache_shardings, dp_axes,
+                                       param_shardings)
+from repro.train.steps import make_serve_step, make_train_step
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# accounting-unit reduction per arch family
+# ---------------------------------------------------------------------------
+
+def accounting_configs(cfg: ModelConfig) -> Tuple[ModelConfig, ModelConfig,
+                                                  float, int, int]:
+    """(cfg_small, cfg_big, units_full, units_small, units_big): linear
+    extrapolation F_full = F_s + (units_full - u_s)/(u_b - u_s) * (F_b - F_s)."""
+    if cfg.is_encoder_decoder:
+        c1 = dataclasses.replace(cfg, n_layers=1, n_encoder_layers=1)
+        c2 = dataclasses.replace(cfg, n_layers=2, n_encoder_layers=2)
+        return c1, c2, cfg.n_layers, 1, 2
+    if cfg.block_pattern == "mamba2_hybrid":
+        per = cfg.hybrid_attn_every
+        c1 = dataclasses.replace(cfg, n_layers=per)
+        c2 = dataclasses.replace(cfg, n_layers=2 * per)
+        return c1, c2, cfg.n_layers / per, 1, 2
+    if cfg.block_pattern == "xlstm":
+        per = cfg.slstm_every
+        c1 = dataclasses.replace(cfg, n_layers=per)
+        c2 = dataclasses.replace(cfg, n_layers=2 * per)
+        return c1, c2, cfg.n_layers // per, 1, 2
+    if cfg.n_experts and cfg.n_dense_layers:
+        # keep the dense layer in the base; delta = one MoE layer
+        c1 = dataclasses.replace(cfg, n_layers=cfg.n_dense_layers + 1)
+        c2 = dataclasses.replace(cfg, n_layers=cfg.n_dense_layers + 2)
+        return c1, c2, cfg.n_layers - cfg.n_dense_layers, 1, 2
+    c1 = dataclasses.replace(cfg, n_layers=1)
+    c2 = dataclasses.replace(cfg, n_layers=2)
+    return c1, c2, cfg.n_layers, 1, 2
+
+
+# ---------------------------------------------------------------------------
+# cell builders
+# ---------------------------------------------------------------------------
+
+MICROBATCHES = int(os.environ.get("DIT_MICROBATCHES", "1"))
+
+
+def build_lowered(cfg: ModelConfig, shape_name: str, mesh,
+                  donate: bool = True):
+    """Lower the cell's step function with production shardings."""
+    specs = input_specs(cfg, shape_name)
+    kind = specs["kind"]
+    pshapes = param_shapes(cfg)
+    pshard = param_shardings(pshapes, mesh)
+    bspec = NamedSharding(mesh, batch_spec(mesh))
+
+    if kind == "train":
+        opt = adamw.AdamWConfig()
+        ostate_shapes = jax.eval_shape(lambda p: adamw.init(p), pshapes)
+        oshard = jax.tree.map(
+            lambda l: NamedSharding(mesh, P()) if l.ndim == 0 else None,
+            ostate_shapes)
+        # moments follow the param shardings; scalar step replicated
+        oshard = adamw.AdamWState(
+            step=NamedSharding(mesh, P()),
+            mu=param_shardings(ostate_shapes.mu, mesh),
+            nu=param_shardings(ostate_shapes.nu, mesh))
+        step_raw = make_train_step(cfg, opt, microbatches=MICROBATCHES,
+                                   compress_grads=False)
+
+        def train_fn(params, opt_state, batch):
+            p, o, _, m = step_raw(params, opt_state, None, batch)
+            return p, o, m["loss"]
+
+        bshard = jax.tree.map(lambda l: bspec, specs["inputs"])
+        fn = jax.jit(
+            train_fn,
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, NamedSharding(mesh, P())),
+            donate_argnums=(0, 1) if donate else ())
+        return fn.lower(pshapes, ostate_shapes, specs["inputs"]), specs
+
+    if kind == "prefill":
+        # serving semantics: prefill fills the cache and emits ONLY the
+        # last position's logits (§Perf iteration 12 — returning the full
+        # (B,S,V) fp32 logits cost seamless 135 GB/device).
+        def prefill_fn(params, tokens, *extra):
+            kwargs = {}
+            i = 0
+            if cfg.frontend == "vision_stub":
+                kwargs["prefix_embeds"] = extra[i]; i += 1
+            if cfg.is_encoder_decoder:
+                kwargs["encoder_embeds"] = extra[i]; i += 1
+            hidden = forward(params, tokens, cfg, remat=False,
+                             return_hidden=True, **kwargs)
+            from repro.models.model import lm_head_weight
+            return (hidden[:, -1] @ lm_head_weight(params, cfg)
+                    ).astype(jnp.float32)
+
+        args = [pshapes, specs["tokens"]]
+        in_sh = [pshard, bspec]
+        for key in ("prefix_embeds", "encoder_embeds"):
+            if key in specs:
+                args.append(specs[key])
+                in_sh.append(bspec)
+        vocab_ax = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+        fn = jax.jit(prefill_fn, in_shardings=tuple(in_sh),
+                     out_shardings=NamedSharding(
+                         mesh, P(dp_axes(mesh), vocab_ax)))
+        return fn.lower(*args), specs
+
+    # decode
+    cshapes = specs["caches"]
+    cshard = cache_shardings(cshapes, mesh, cfg, specs["batch"])
+    tok_sh = NamedSharding(
+        mesh, batch_spec(mesh) if specs["batch"] % _dp_size(mesh) == 0
+        else P(None, None))
+
+    def decode_fn(params, caches, tokens, position, *extra):
+        enc = extra[0] if extra else None
+        logits, new_caches = decode_step(params, caches, tokens, position,
+                                         cfg, encoder_out=enc)
+        return logits, new_caches
+
+    args = [pshapes, cshapes, specs["tokens"], specs["position"]]
+    in_sh = [pshard, cshard, tok_sh, NamedSharding(mesh, P())]
+    if "encoder_out" in specs:
+        args.append(specs["encoder_out"])
+        in_sh.append(tok_sh if specs["batch"] % _dp_size(mesh) == 0
+                     else NamedSharding(mesh, P(None, None, None)))
+    fn = jax.jit(decode_fn, in_shardings=tuple(in_sh),
+                 out_shardings=(NamedSharding(mesh, P()), cshard),
+                 donate_argnums=(1,) if donate else ())
+    return fn.lower(*args), specs
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# per-cell run
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             skip_accounting: bool = False) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    from repro.models import shard_ctx
+    shard_ctx.set_mesh(mesh)   # pin activation layouts during tracing
+    out: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+    }
+    t0 = time.time()
+
+    # 1. FULL config: compile + memory analysis
+    lowered, specs = build_lowered(cfg, shape_name, mesh)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    out["full"] = {
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "argument_bytes_per_device": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_bytes_per_device": int(getattr(mem, "output_size_in_bytes", 0)),
+        "temp_bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "peak_bytes_per_device": int(
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)),
+    }
+    # cost_analysis is PER-DEVICE on the partitioned module (verified
+    # empirically); scale by n_chips for global numbers. Loop bodies are
+    # counted once, hence the accounting configs below for the real terms.
+    ca = compiled.cost_analysis() or {}
+    out["full"]["hlo_flops_raw"] = float(ca.get("flops", 0.0)) * n_chips
+    out["full"]["hlo_bytes_raw"] = float(ca.get("bytes accessed", 0.0)) * n_chips
+    cs = collective_stats(compiled.as_text())
+    out["full"]["collective_bytes_raw"] = cs.total_bytes * n_chips
+    out["full"]["collectives"] = cs.summary()
+    del compiled, lowered
+
+    # 2. accounting configs for the roofline terms
+    if not skip_accounting:
+        c1, c2, units_full, u1, u2 = accounting_configs(cfg)
+        vals = {}
+        for tag, c in (("small", c1), ("big", c2)):
+            with accounting.accounting_mode(specs["seq"]):
+                low, _ = build_lowered(c, shape_name, mesh, donate=False)
+                comp = low.compile()
+            cai = comp.cost_analysis() or {}
+            csi = collective_stats(comp.as_text())
+            vals[tag] = {         # x n_chips: per-device -> global
+                "flops": float(cai.get("flops", 0.0)) * n_chips,
+                "bytes": float(cai.get("bytes accessed", 0.0)) * n_chips,
+                "coll": float(csi.total_bytes) * n_chips,
+            }
+            del comp, low
+        scale = (units_full - u1) / (u2 - u1)
+        extr = {k: vals["small"][k] + scale * (vals["big"][k] - vals["small"][k])
+                for k in ("flops", "bytes", "coll")}
+        mf = flops_lib.model_flops(cfg, specs["batch"], specs["seq"], specs["kind"])
+        extr["flops"] += mf["slstm_correction"]
+        out["accounting"] = {
+            "per_unit": vals, "units_full": units_full,
+            "hlo_flops": extr["flops"], "hlo_bytes": extr["bytes"],
+            "collective_bytes": extr["coll"],
+            "model_flops": mf["total"],
+            "model_flops_breakdown": mf,
+            "useful_ratio": mf["total"] / extr["flops"] if extr["flops"] else 0.0,
+        }
+        # roofline terms (single-pod constants; per-chip)
+        PEAK, HBM, ICI = 197e12, 819e9, 50e9 * 4   # bf16 peak, HBM bw, 4 links
+        out["roofline"] = {
+            "compute_s": extr["flops"] / (n_chips * PEAK),
+            "memory_s": extr["bytes"] / (n_chips * HBM),
+            "collective_s": extr["coll"] / (n_chips * ICI),
+        }
+        dom = max(out["roofline"], key=out["roofline"].get)
+        out["roofline"]["dominant"] = dom
+        tot = max(out["roofline"]["compute_s"], out["roofline"]["memory_s"],
+                  out["roofline"]["collective_s"])
+        out["roofline"]["roofline_fraction"] = (
+            out["roofline"]["compute_s"] / tot if tot else 0.0)
+
+    out["elapsed_s"] = round(time.time() - t0, 1)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--skip-accounting", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    tag = f"{args.arch}__{args.shape}__{'mp' if args.multi_pod else 'sp'}"
+    path = os.path.join(args.out, tag + ".json")
+    try:
+        result = run_cell(args.arch, args.shape, args.multi_pod,
+                          skip_accounting=args.skip_accounting)
+        result["status"] = "ok"
+    except Exception as e:
+        result = {"arch": args.arch, "shape": args.shape,
+                  "multi_pod": args.multi_pod, "status": "error",
+                  "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-3000:]}
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    print(json.dumps({k: v for k, v in result.items() if k != "traceback"},
+                     indent=1))
+    if result["status"] != "ok":
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Collective-byte extraction from compiled HLO text (§Roofline sources).
+
+cost_analysis has no collective term, so we parse the post-SPMD HLO: sum the
+operand bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. Ops inside while-loop bodies are counted once by the text,
+so the caller supplies `loop_factor` (the known scan trip count — layers) and
+we scale ops that live in while-body computations accordingly; the accounting
+configs used for the roofline are loop-free, making the scaling exact there.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string like 'f32[128,512]{1,0}' or a tuple
+    '(f32[2], bf16[4,4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def summary(self) -> str:
+        parts = [f"{k}:{v/1e6:.1f}MB(x{self.count_by_kind[k]})"
+                 for k, v in sorted(self.bytes_by_kind.items()) if v]
+        return " ".join(parts) or "none"
+
+
+def _split_computations(hlo: str) -> List[Tuple[str, List[str]]]:
+    """(computation_name, lines) blocks from HLO text."""
+    comps: List[Tuple[str, List[str]]] = []
+    cur_name = None
+    cur: List[str] = []
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^%?([\w\.\-]+)\s*(\([^)]*\))?.*\{$", stripped)
+        if m and ("->" in stripped or stripped.endswith("{")) and not stripped.startswith("ROOT"):
+            if cur_name is not None:
+                comps.append((cur_name, cur))
+            cur_name = m.group(1)
+            cur = []
+        elif stripped == "}":
+            if cur_name is not None:
+                comps.append((cur_name, cur))
+            cur_name, cur = None, []
+        elif cur_name is not None:
+            cur.append(stripped)
+    if cur_name is not None and cur:
+        comps.append((cur_name, cur))
+    return comps
+
+
+def collective_stats(hlo: str, loop_factor: float = 1.0) -> CollectiveStats:
+    """Sum collective operand bytes; ops inside while-body computations are
+    scaled by loop_factor."""
+    # find computations used as while bodies/conditions
+    loop_comps = set()
+    for m in re.finditer(r"(?:body|condition)=%?([\w\.\-]+)", hlo):
+        loop_comps.add(m.group(1))
+
+    bytes_by_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    count_by_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+
+    for comp_name, lines in _split_computations(hlo):
+        in_loop = any(comp_name.startswith(lc) or lc.startswith(comp_name)
+                      for lc in loop_comps)
+        factor = loop_factor if in_loop else 1.0
+        for line in lines:
+            for kind in _COLLECTIVES:
+                # match op kind at the instruction position: "x = shape kind("
+                if re.search(rf"=\s*[^=]*\b{kind}(-start|-done)?\(", line):
+                    if f"{kind}-done" in line:
+                        continue          # counted at -start
+                    # operand bytes: the instruction's result shape equals the
+                    # transferred payload for these collectives
+                    eq = line.split("=", 1)
+                    shape_part = eq[1] if len(eq) > 1 else line
+                    nbytes = _shape_bytes(shape_part.split(f"{kind}")[0])
+                    bytes_by_kind[kind] += int(nbytes * factor)
+                    count_by_kind[kind] += 1
+                    break
+    return CollectiveStats(bytes_by_kind, count_by_kind)

@@ -1,0 +1,82 @@
+"""Render EXPERIMENTS.md §Dry-run + §Roofline tables from results/dryrun.
+
+  PYTHONPATH=src python -m repro.launch.report --out results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(out: str) -> Dict[str, dict]:
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(out, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        key = f"{r.get('arch')}|{r.get('shape')}|{'mp' if r.get('multi_pod') else 'sp'}"
+        cells[key] = r
+    return cells
+
+
+def fmt_bytes(n: float) -> str:
+    return f"{n/1e9:.2f}"
+
+
+def dryrun_table(cells: Dict[str, dict]) -> List[str]:
+    rows = ["| arch | shape | mesh | compile | peak GB/dev | collectives |",
+            "|---|---|---|---|---|---|"]
+    for key in sorted(cells):
+        r = cells[key]
+        arch, shape, m = key.split("|")
+        mesh = "2x16x16" if m == "mp" else "16x16"
+        if r.get("status") != "ok":
+            rows.append(f"| {arch} | {shape} | {mesh} | FAIL | - | "
+                        f"{str(r.get('error'))[:60]} |")
+            continue
+        f = r["full"]
+        rows.append(
+            f"| {arch} | {shape} | {mesh} | ok ({f['compile_s']:.0f}s) | "
+            f"{fmt_bytes(f['peak_bytes_per_device'])} | {f['collectives'][:70]} |")
+    return rows
+
+
+def roofline_table(cells: Dict[str, dict]) -> List[str]:
+    rows = ["| arch | shape | compute s | memory s | collective s | dominant | "
+            "roofline frac | MODEL/HLO | bottleneck note |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for key in sorted(cells):
+        r = cells[key]
+        arch, shape, m = key.split("|")
+        if m != "sp" or r.get("status") != "ok" or "roofline" not in r:
+            continue
+        rf, acc = r["roofline"], r["accounting"]
+        dom = rf["dominant"].replace("_s", "")
+        note = {
+            "compute": "MXU-bound: fuse/alignment wins only",
+            "memory": "HBM-bound: fewer bytes/act re-reads (fusion, dtype, remat policy)",
+            "collective": "ICI-bound: reshard/overlap collectives",
+        }[dom]
+        rows.append(
+            f"| {arch} | {shape} | {rf['compute_s']:.3f} | {rf['memory_s']:.3f} | "
+            f"{rf['collective_s']:.3f} | {dom} | {rf['roofline_fraction']:.3f} | "
+            f"{acc['useful_ratio']:.2f} | {note} |")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+    cells = load(args.out)
+    ok = sum(1 for r in cells.values() if r.get("status") == "ok")
+    print(f"## Dry-run matrix ({ok}/{len(cells)} cells ok)\n")
+    print("\n".join(dryrun_table(cells)))
+    print("\n## Roofline (single-pod 16x16, per-cell three terms)\n")
+    print("\n".join(roofline_table(cells)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Serving launcher: batched prefill + decode loop against preallocated
+KV caches.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
+      --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.models.model import decode_init, decode_step, forward, init_params
+from repro.train.steps import make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    key = jax.random.PRNGKey(1)
+
+    max_len = args.prompt_len + args.gen
+    caches = decode_init(params, cfg, args.batch, max_len)
+    serve = jax.jit(make_serve_step(cfg))
+
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+    enc_kwargs = {}
+    if cfg.is_encoder_decoder:
+        enc = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.n_prefix, cfg.d_model)) * 0.02, cfg.dtype)
+        enc_kwargs["encoder_out"] = enc @ params["frontend_proj"]
+
+    # prefill token-by-token through the cache (keeps one compiled step)
+    t0 = time.time()
+    logits = None
+    for i in range(args.prompt_len):
+        logits, caches = serve(params, caches, prompts[:, i:i + 1],
+                               jnp.asarray(i), **enc_kwargs)
+    t_prefill = time.time() - t0
+
+    generated = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    t0 = time.time()
+    for i in range(args.gen):
+        generated.append(np.asarray(tok)[:, 0])
+        logits, caches = serve(params, caches, tok,
+                               jnp.asarray(args.prompt_len + i), **enc_kwargs)
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits / args.temperature)[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    t_gen = time.time() - t0
+
+    gen = np.stack(generated, 1)
+    print(f"arch={cfg.name} batch={args.batch} "
+          f"prefill {args.prompt_len} tok in {t_prefill:.2f}s | "
+          f"decode {args.gen} tok in {t_gen:.2f}s "
+          f"({args.batch * args.gen / max(t_gen, 1e-9):.1f} tok/s)")
+    print("sample generations (token ids):")
+    for row in gen[:2]:
+        print(" ", row[:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

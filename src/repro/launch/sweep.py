@@ -1,0 +1,90 @@
+"""Dry-run sweep driver: every (arch x shape) cell on the single-pod mesh
+(with roofline accounting) AND the 2-pod mesh (compile proof only). Each cell
+runs in a fresh subprocess (crash isolation, clean XLA state); completed cells
+are skipped on re-run (JSON cache).
+
+  PYTHONPATH=src python -m repro.launch.sweep --out results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import cells, list_archs
+
+
+def cell_done(out: str, arch: str, shape: str, mp: bool) -> bool:
+    path = os.path.join(out, f"{arch}__{shape}__{'mp' if mp else 'sp'}.json")
+    if not os.path.exists(path):
+        return False
+    try:
+        with open(path) as f:
+            return json.load(f).get("status") == "ok"
+    except Exception:
+        return False
+
+
+def run_one(out: str, arch: str, shape: str, mp: bool, timeout: int) -> str:
+    if cell_done(out, arch, shape, mp):
+        return "cached"
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--out", out]
+    if mp:
+        cmd += ["--multi-pod", "--skip-accounting"]
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                              timeout=timeout)
+        status = "ok" if proc.returncode == 0 else "error"
+        if status == "error":
+            tail = (proc.stderr or proc.stdout or "")[-1500:]
+            path = os.path.join(
+                out, f"{arch}__{shape}__{'mp' if mp else 'sp'}.json")
+            if not os.path.exists(path):
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "shape": shape, "multi_pod": mp,
+                               "status": "error", "error": "subprocess",
+                               "traceback": tail}, f, indent=1)
+    except subprocess.TimeoutExpired:
+        status = "timeout"
+        path = os.path.join(out, f"{arch}__{shape}__{'mp' if mp else 'sp'}.json")
+        with open(path, "w") as f:
+            json.dump({"arch": arch, "shape": shape, "multi_pod": mp,
+                       "status": "error", "error": f"timeout {timeout}s"}, f)
+    return f"{status} ({time.time()-t0:.0f}s)"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--timeout", type=int, default=3000)
+    ap.add_argument("--only-arch", default=None)
+    ap.add_argument("--skip-multipod", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    archs = [args.only_arch] if args.only_arch else list_archs()
+    todo = []
+    for arch in archs:
+        for shape in cells(arch):
+            todo.append((arch, shape, False))
+    if not args.skip_multipod:
+        for arch in archs:
+            for shape in cells(arch):
+                todo.append((arch, shape, True))
+
+    for i, (arch, shape, mp) in enumerate(todo):
+        tag = f"[{i+1}/{len(todo)}] {arch} {shape} {'2-pod' if mp else '1-pod'}"
+        print(tag, "...", flush=True)
+        print(tag, "->", run_one(args.out, arch, shape, mp, args.timeout),
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

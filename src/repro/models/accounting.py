@@ -1,0 +1,48 @@
+"""FLOP/byte accounting mode for the roofline extraction.
+
+XLA's cost_analysis counts a while-loop body ONCE regardless of trip count
+(verified empirically — see EXPERIMENTS.md §Roofline method). The roofline
+therefore measures reduced-depth configs (L = 1 and L = 2) with every scan
+unrolled, and extrapolates linearly: F(L) = F(1) + (L-1) * (F(2) - F(1)).
+
+`accounting_mode()` flips module-global switches that make the model stack
+fully loop-free:
+- layer groups run as python loops over stacked params (model._scan_group);
+- chunked attention / SSD / mLSTM scans run with `unroll=True` and enlarged
+  chunks so the unroll factor stays small;
+- the sLSTM time scan cannot be unrolled (S steps); its in-loop FLOPs are
+  added analytically by launch/flops.py (documented correction).
+"""
+from __future__ import annotations
+
+import contextlib
+
+UNROLL_LAYERS = False
+SCAN_UNROLL = False
+CHUNK_OVERRIDE = None          # chunk length for attention/SSD in accounting
+MAX_UNROLL_STEPS = 8           # cap on unrolled inner-scan bodies
+
+
+@contextlib.contextmanager
+def accounting_mode(seq_len: int):
+    global UNROLL_LAYERS, SCAN_UNROLL, CHUNK_OVERRIDE
+    prev = (UNROLL_LAYERS, SCAN_UNROLL, CHUNK_OVERRIDE)
+    UNROLL_LAYERS = True
+    SCAN_UNROLL = True
+    CHUNK_OVERRIDE = max(128, seq_len // MAX_UNROLL_STEPS)
+    try:
+        yield
+    finally:
+        UNROLL_LAYERS, SCAN_UNROLL, CHUNK_OVERRIDE = prev
+
+
+def chunk(default: int) -> int:
+    return CHUNK_OVERRIDE if CHUNK_OVERRIDE is not None else default
+
+
+def scan(f, init, xs, length=None):
+    """lax.scan that unrolls fully in accounting mode."""
+    import jax
+    if SCAN_UNROLL:
+        return jax.lax.scan(f, init, xs, length=length, unroll=True)
+    return jax.lax.scan(f, init, xs, length=length)

@@ -1,0 +1,355 @@
+"""Attention blocks: GQA/MQA (with qk-norm, arbitrary head_dim), MLA
+(DeepSeek-V2 latent attention with compressed KV cache), cross-attention for
+encoder-decoder stacks, and the decode path against a preallocated KV cache.
+
+The projection matmuls are the DiT-scheduled GEMMs: on the production mesh
+their sharding comes from `repro.parallel.spec_rules` (the data-layout half of
+the schedule), and the contraction pattern (TP all-reduce vs split-K scatter)
+is the dataflow half.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ModelConfig, Params, apply_rope, dense_init,
+                                 rms_head_norm, rope_tables)
+
+NEG_INF = -1e30
+
+
+def gqa_params(key, cfg: ModelConfig) -> Params:
+    hd = cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, cfg.d_model, cfg.n_heads * hd, cfg.dtype),
+        "wk": dense_init(k2, cfg.d_model, cfg.n_kv_heads * hd, cfg.dtype),
+        "wv": dense_init(k3, cfg.d_model, cfg.n_kv_heads * hd, cfg.dtype),
+        "wo": dense_init(k4, cfg.n_heads * hd, cfg.d_model, cfg.dtype),
+    }
+
+
+def _flash_fwd(q, k, v, causal: bool, scale: float, cq: int, ck: int):
+    """Streaming online-softmax forward. q: (b,nq,cq,hkv,g,d) fp32;
+    k/v: (b,nk,ck,hkv,d|dv) fp32. Returns out (b,nq,cq,hkv,g,dv) and
+    lse (b,nq,cq,hkv,g)."""
+    from repro.models import accounting
+    b, nq, cq_, hkv, g, d = q.shape
+    nk = k.shape[1]
+    dv = v.shape[-1]
+
+    def q_block(qi, q_blk):
+        def kv_step(carry, inputs):
+            m_run, l_run, acc = carry
+            kj, k_blk, v_blk = inputs
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk) * scale
+            if causal:
+                qpos = qi * cq + jnp.arange(cq)
+                kpos = kj * ck + jnp.arange(ck)
+                mask = kpos[None, :] <= qpos[:, None]
+                logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m_run, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, v_blk)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, dv), jnp.float32)
+        (m, l, acc), _ = accounting.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), k.swapaxes(0, 1), v.swapaxes(0, 1)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        # -> (b, cq, hkv, g, dv) / (b, cq, hkv, g)
+        return out.transpose(0, 3, 1, 2, 4), lse.transpose(0, 3, 1, 2)
+
+    _, (outs, lses) = accounting.scan(
+        lambda c, args: (c, q_block(*args)), 0,
+        (jnp.arange(nq), q.swapaxes(0, 1)))
+    return outs.swapaxes(0, 1), lses.swapaxes(0, 1)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, scale, cq, ck):
+    out, _ = _flash_fwd(q, k, v, causal, scale, cq, ck)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, causal, scale, cq, ck):
+    out, lse = _flash_fwd(q, k, v, causal, scale, cq, ck)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(causal, scale, cq, ck, res, dout):
+    """Flash backward: recompute p block-by-block from lse; O(S) memory."""
+    from repro.models import accounting
+    q, k, v, out, lse = res
+    b, nq, cq_, hkv, g, d = q.shape
+    nk = k.shape[1]
+    dv = v.shape[-1]
+    delta = (dout * out).sum(-1)                          # (b,nq,cq,hkv,g)
+
+    def q_block(carry, inputs):
+        dk_acc, dv_acc = carry
+        qi, q_blk, do_blk, lse_blk, dl_blk = inputs
+
+        def kv_step(inner, kv_inputs):
+            dq_blk, dk_acc, dv_acc = inner
+            kj, k_blk, v_blk = kv_inputs
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk) * scale
+            if causal:
+                qpos = qi * cq + jnp.arange(cq)
+                kpos = kj * ck + jnp.arange(ck)
+                mask = kpos[None, :] <= qpos[:, None]
+                logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            p = jnp.exp(logits - lse_blk.transpose(0, 2, 3, 1)[..., None])
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", do_blk, v_blk)
+            ds = p * (dp - dl_blk.transpose(0, 2, 3, 1)[..., None]) * scale
+            dq_blk = dq_blk + jnp.einsum("bhgqk,bkhd->bqhgd", ds, k_blk)
+            dk_new = jnp.einsum("bhgqk,bqhgd->bkhd", ds, q_blk)
+            dv_new = jnp.einsum("bhgqk,bqhgd->bkhd", p, do_blk)
+            dk_acc = dk_acc.at[:, kj].add(dk_new)
+            dv_acc = dv_acc.at[:, kj].add(dv_new)
+            return (dq_blk, dk_acc, dv_acc), None
+
+        dq0 = jnp.zeros_like(q_blk)
+        (dq_blk, dk_acc, dv_acc), _ = accounting.scan(
+            kv_step, (dq0, dk_acc, dv_acc),
+            (jnp.arange(nk), k.swapaxes(0, 1), v.swapaxes(0, 1)))
+        return (dk_acc, dv_acc), dq_blk
+
+    dk0 = jnp.zeros_like(k)
+    dv0 = jnp.zeros_like(v)
+    (dk, dv_), dqs = accounting.scan(
+        q_block, (dk0, dv0),
+        (jnp.arange(nq), q.swapaxes(0, 1), dout.swapaxes(0, 1),
+         lse.swapaxes(0, 1), delta.swapaxes(0, 1)))
+    return dqs.swapaxes(0, 1), dk, dv_
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def chunked_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
+                 chunk_q: int = 256, chunk_k: int = 256,
+                 scale: Optional[float] = None) -> jax.Array:
+    """Flash attention in pure jnp (custom_vjp; O(S) memory both directions):
+    double scan over query/key chunks, never materializing the (Sq, Sk)
+    logits. This is the memory-feasible path for 4k training and 32k prefill
+    (a Pallas flash kernel plays the same role on real TPUs; this lowers
+    everywhere).
+
+    q: (B, Sq, H, D); k/v: (B, Sk, Hkv, D).
+    """
+    from repro.models import accounting
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    dv = v.shape[-1]
+    g = h // hkv
+
+    def fit(s, target):
+        # largest chunk <= target that divides s (VLM prefixes make seq
+        # lengths like 4672 = 4096 + 576 patches)
+        c = min(target, s)
+        while s % c:
+            c -= 1
+        return c
+
+    cq = fit(sq, accounting.chunk(chunk_q))
+    ck = fit(sk, accounting.chunk(chunk_k))
+    nq, nk = sq // cq, sk // ck
+    if scale is None:
+        scale = d ** -0.5
+
+    qc = q.reshape(b, nq, cq, hkv, g, d).astype(jnp.float32)
+    kc = k.reshape(b, nk, ck, hkv, d).astype(jnp.float32)
+    vc = v.reshape(b, nk, ck, hkv, dv).astype(jnp.float32)
+    out = _flash(qc, kc, vc, causal, scale, cq, ck)
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
+          q_positions: Optional[jax.Array] = None,
+          kv_len: Optional[jax.Array] = None,
+          scale: Optional[float] = None) -> jax.Array:
+    """q: (B, Sq, H, D), k/v: (B, Sk, Hkv, D) with GQA head grouping.
+
+    q_positions: positions of the queries (decode: the cache write index);
+    kv_len: valid cache length mask bound (decode against a preallocated cache).
+    """
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    groups = h // hkv
+    qg = q.reshape(b, sq, hkv, groups, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits *= (d ** -0.5) if scale is None else scale
+    kpos = jnp.arange(sk)
+    if causal:
+        qpos = q_positions if q_positions is not None else jnp.arange(sq)
+        mask = kpos[None, :] <= qpos[:, None]            # (sq, sk)
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    if kv_len is not None:
+        valid = kpos[None, :] < kv_len[:, None]          # (b, sk)
+        logits = jnp.where(valid[:, None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, h, v.shape[-1])
+
+
+def gqa_attention(p: Params, x: jax.Array, cfg: ModelConfig,
+                  positions: jax.Array,
+                  cache: Optional[Dict[str, jax.Array]] = None,
+                  causal: bool = True,
+                  kv_input: Optional[jax.Array] = None,
+                  ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Self- or cross-attention. With `cache`, runs one decode step: writes
+    this step's K/V at position `cache['index']` and attends to the prefix.
+    kv_input: encoder output for cross-attention (no cache update then unless
+    it is the first step)."""
+    b, s, _ = x.shape
+    hd = cfg.hd
+    kv_src = kv_input if kv_input is not None else x
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (kv_src @ p["wk"]).reshape(b, kv_src.shape[1], cfg.n_kv_heads, hd)
+    v = (kv_src @ p["wv"]).reshape(b, kv_src.shape[1], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q, k = rms_head_norm(q), rms_head_norm(k)
+    if kv_input is None:  # RoPE only for self-attention
+        cos_q, sin_q = rope_tables(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos_q, sin_q)
+        k = apply_rope(k, cos_q, sin_q)
+
+    if cache is None:
+        if s > 1024 and kv_src.shape[1] > 1024:
+            out = chunked_sdpa(q, k, v, causal=causal and kv_input is None)
+        else:
+            out = _sdpa(q, k, v, causal=causal and kv_input is None)
+        new_cache = None
+    else:
+        idx = cache["index"]                              # scalar int32
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, axis=1)
+        kv_len = jnp.full((b,), idx + s, dtype=jnp.int32)
+        out = _sdpa(q, ck, cv, causal=True, q_positions=positions,
+                    kv_len=kv_len)
+        new_cache = {"k": ck, "v": cv, "index": idx + s}
+    return out.reshape(b, s, cfg.n_heads * hd) @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — DeepSeek-V2 Multi-head Latent Attention
+# ---------------------------------------------------------------------------
+
+def mla_params(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    dn, dr = cfg.nope_head_dim, cfg.rope_head_dim
+    p = {
+        "w_dkv": dense_init(ks[0], cfg.d_model, cfg.kv_lora_rank, cfg.dtype),
+        "w_kr": dense_init(ks[1], cfg.d_model, dr, cfg.dtype),
+        "w_uk": dense_init(ks[2], cfg.kv_lora_rank, cfg.n_heads * dn, cfg.dtype),
+        "w_uv": dense_init(ks[3], cfg.kv_lora_rank, cfg.n_heads * dn, cfg.dtype),
+        "wo": dense_init(ks[4], cfg.n_heads * dn, cfg.d_model, cfg.dtype),
+    }
+    if cfg.q_lora_rank:
+        p["w_dq"] = dense_init(ks[5], cfg.d_model, cfg.q_lora_rank, cfg.dtype)
+        p["w_uq"] = dense_init(ks[6], cfg.q_lora_rank,
+                               cfg.n_heads * (dn + dr), cfg.dtype)
+    else:
+        p["wq"] = dense_init(ks[7], cfg.d_model, cfg.n_heads * (dn + dr), cfg.dtype)
+    return p
+
+
+def mla_attention(p: Params, x: jax.Array, cfg: ModelConfig,
+                  positions: jax.Array,
+                  cache: Optional[Dict[str, jax.Array]] = None,
+                  ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """MLA. Two execution forms, as in DeepSeek-V2's own deployment:
+
+    - train/prefill (no cache): the NAIVE form — up-project K/V from c_kv and
+      run flash attention at head dim (dn + dr). Projection FLOPs are
+      identical to the absorbed form but scores cost (dn+dr) instead of
+      (r+dr) per head — 3x cheaper for the paper config.
+    - decode (cache): the ABSORBED form — W_uk folds into the query so
+      attention runs in latent space against the compressed c_kv directly (an
+      MQA with key dim r + dr). Only c_kv and the shared rotary key are
+      cached, and no per-head K/V is ever rematerialized — the flat decode
+      GEMMs of paper Insight 4."""
+    b, s, _ = x.shape
+    dn, dr, h, r = cfg.nope_head_dim, cfg.rope_head_dim, cfg.n_heads, cfg.kv_lora_rank
+
+    if cfg.q_lora_rank:
+        q = (x @ p["w_dq"]) @ p["w_uq"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+
+    c_kv = x @ p["w_dkv"]                                  # (b, s, r)
+    k_r = (x @ p["w_kr"]).reshape(b, s, 1, dr)             # shared across heads
+
+    cos, sin = rope_tables(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_r = apply_rope(k_r, cos, sin)
+
+    if cache is not None:
+        idx = cache["index"]
+        c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, idx, axis=1)
+        k_r = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_r, idx, axis=1)
+        new_cache = {"c_kv": c_kv, "k_rope": k_r, "index": idx + s}
+        kv_len = idx + s
+    else:
+        new_cache = None
+        kv_len = None
+
+    scale = (dn + dr) ** -0.5
+    if cache is None:
+        # naive form: up-project K/V once, flash attention at dim dn + dr.
+        sk = c_kv.shape[1]
+        k_nope = (c_kv @ p["w_uk"]).reshape(b, sk, h, dn)
+        v = (c_kv @ p["w_uv"]).reshape(b, sk, h, dn)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_r, (b, sk, h, dr))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        if s > 1024:
+            out = chunked_sdpa(q_full, k_full, v, causal=True, scale=scale)
+        else:
+            out = _sdpa(q_full, k_full, v, causal=True, scale=scale)
+        out = out.reshape(b, s, h * dn)
+        return out @ p["wo"], new_cache
+
+    # absorbed form (decode): q_lat[h] = q_nope[h] @ W_uk[h]^T  (b,s,h,r)
+    w_uk = p["w_uk"].reshape(r, h, dn)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
+    q_aug = jnp.concatenate([q_lat, q_rope], axis=-1)      # (b,s,h,r+dr)
+    k_aug = jnp.concatenate([c_kv[:, :, None, :], k_r], axis=-1)  # (b,sk,1,r+dr)
+    v_lat = c_kv[:, :, None, :]                            # (b,sk,1,r)
+    o_lat = _sdpa(q_aug, k_aug, v_lat, causal=True,
+                  q_positions=positions,
+                  kv_len=jnp.full((b,), kv_len, jnp.int32),
+                  scale=scale)
+    # un-absorb the values: out[h] = o_lat @ W_uv[h]
+    w_uv = p["w_uv"].reshape(r, h, dn)
+    out = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv).reshape(b, s, h * dn)
+    return out @ p["wo"], new_cache
+
+
+def make_kv_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, jax.Array]:
+    """Preallocated per-layer cache pytree (decode shapes of the brief)."""
+    if cfg.attn == "mla":
+        return {
+            "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), cfg.dtype),
+            "k_rope": jnp.zeros((batch, max_len, 1, cfg.rope_head_dim), cfg.dtype),
+            "index": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,168 @@
+"""Model configuration + shared layer primitives (pure JAX, no flax).
+
+Parameters are plain nested dicts (pytrees). Every assigned architecture is
+expressible as a `ModelConfig`; block kinds cover dense attention, MLA, MoE,
+Mamba2, sLSTM/mLSTM and encoder-decoder stacks. Layers are written against
+`jnp` ops only so the whole stack lowers under pjit on any mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    act: str = "swiglu"                     # swiglu | geglu | gelu
+    norm: str = "rmsnorm"                   # rmsnorm | layernorm | nonparam_ln
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = True
+    # attention family
+    attn: str = "gqa"                       # gqa | mla
+    # MLA (DeepSeek-V2)
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    n_dense_layers: int = 0                 # leading dense layers before MoE
+    capacity_factor: float = 1.25
+    # SSM / hybrid / xlstm
+    block_pattern: str = "attn"             # attn | mamba2_hybrid | xlstm
+    ssm_state: int = 0
+    mamba_headdim: int = 64
+    hybrid_attn_every: int = 6              # shared attn block period (zamba2)
+    slstm_every: int = 8                    # sLSTM period in xlstm
+    # encoder-decoder
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    # modality frontend stub: prefix embeddings prepended to the sequence
+    frontend: str = "none"                  # none | vision_stub | audio_stub
+    n_prefix: int = 0                       # patches / frames per example
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    def param_count(self) -> int:
+        """Total parameters (for 6ND model-FLOPs accounting)."""
+        leaves = jax.tree.leaves(jax.eval_shape(lambda: init_placeholder(self)))
+        return sum(int(math.prod(l.shape)) for l in leaves)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: shared + top-k experts only)."""
+        total = self.param_count()
+        if not self.n_experts:
+            return total
+        expert = 3 * self.d_model * self.moe_d_ff  # gate+up+down per expert
+        n_moe_layers = self.n_layers - self.n_dense_layers
+        inactive = (self.n_experts - self.moe_top_k) * expert * n_moe_layers
+        return total - inactive
+
+
+def init_placeholder(cfg: "ModelConfig"):
+    # set lazily by model.py to avoid a circular import
+    from repro.models.model import init_params
+    return init_params(jax.random.PRNGKey(0), cfg)
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+def norm_params(cfg: ModelConfig) -> Params:
+    if cfg.norm == "nonparam_ln":
+        return {}
+    return {"scale": jnp.ones((cfg.d_model,), dtype=jnp.float32)}
+
+
+def apply_norm(p: Params, x: jax.Array, cfg: ModelConfig, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        xf = xf * p["scale"]
+    elif cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        xf = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"]
+    elif cfg.norm == "nonparam_ln":  # OLMo: no learned scale/bias
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        raise ValueError(cfg.norm)
+    return xf.astype(x.dtype)
+
+
+def rms_head_norm(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """qk-norm: per-head RMS normalization (Qwen3)."""
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return xf.astype(x.dtype)
+
+
+def rope_tables(positions: jax.Array, dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for given integer positions: (..., dim/2)."""
+    freqs = theta ** (-jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., seq, heads, dim); cos/sin: (..., seq, dim/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                           axis=-1).astype(x.dtype)
+
+
+def activation(cfg: ModelConfig, gate: jax.Array, up: jax.Array) -> jax.Array:
+    if cfg.act == "swiglu":
+        return jax.nn.silu(gate) * up
+    if cfg.act == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    if cfg.act == "gelu":
+        return jax.nn.gelu(gate + up, approximate=True)
+    raise ValueError(cfg.act)
+
+
+def mlp_params(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, cfg.d_model, d_ff, cfg.dtype),
+        "up": dense_init(k2, cfg.d_model, d_ff, cfg.dtype),
+        "down": dense_init(k3, d_ff, cfg.d_model, cfg.dtype),
+    }
+
+
+def apply_mlp(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = activation(cfg, x @ p["gate"], x @ p["up"])
+    return h @ p["down"]

@@ -1,0 +1,472 @@
+"""Top-level model assembly for all assigned architectures.
+
+A model is a stack of homogeneous layer *groups* so parameters stack cleanly
+and each group lowers as ONE `jax.lax.scan` (small HLO, fast SPMD partitioning
+on the 512-device dry-run):
+
+- dense / qk-norm / MQA / VLM archs: one group of attention blocks
+- MoE archs: leading dense layers unrolled + one scanned MoE group
+- zamba2: scanned super-layers of (hybrid_attn_every mamba2 blocks + one
+  SHARED attention block — same weights every super-layer, as in the paper)
+- xlstm: scanned super-layers of (slstm_every-1 mLSTM + 1 sLSTM)
+- seamless (enc-dec): scanned encoder group + scanned decoder group with
+  cross-attention to the (stub-)frontend encoder output
+
+Entry points: init_params / forward (logits) / decode_init + decode_step
+(one-token serve step against preallocated caches).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import accounting
+from repro.models import shard_ctx
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm
+from repro.models.common import (ModelConfig, Params, apply_mlp, apply_norm,
+                                 dense_init, mlp_params, norm_params)
+
+
+# ---------------------------------------------------------------------------
+# single blocks
+# ---------------------------------------------------------------------------
+
+def _attn_block_params(key, cfg: ModelConfig, with_mlp: bool = True,
+                       cross: bool = False) -> Params:
+    ks = jax.random.split(key, 5)
+    p = {
+        "ln1": norm_params(cfg),
+        "attn": attn.mla_params(ks[0], cfg) if cfg.attn == "mla"
+        else attn.gqa_params(ks[0], cfg),
+    }
+    if cross:
+        p["ln_x"] = norm_params(cfg)
+        p["xattn"] = attn.gqa_params(ks[2], cfg)
+    if with_mlp:
+        p["ln2"] = norm_params(cfg)
+        p["mlp"] = mlp_params(ks[1], cfg)
+    return p
+
+
+def _attn_block(p: Params, x, cfg: ModelConfig, positions, cache=None,
+                enc_out=None, causal=True):
+    h = apply_norm(p["ln1"], x, cfg)
+    if cfg.attn == "mla":
+        a, new_cache = attn.mla_attention(p["attn"], h, cfg, positions, cache)
+    else:
+        a, new_cache = attn.gqa_attention(p["attn"], h, cfg, positions, cache,
+                                          causal=causal)
+    x = x + a
+    if enc_out is not None:
+        h = apply_norm(p["ln_x"], x, cfg)
+        a, _ = attn.gqa_attention(p["xattn"], h, cfg, positions, None,
+                                  causal=False, kv_input=enc_out)
+        x = x + a
+    if "mlp" in p:
+        h = apply_norm(p["ln2"], x, cfg)
+        x = x + apply_mlp(p["mlp"], h, cfg)
+    return x, new_cache
+
+
+def _moe_block_params(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = _attn_block_params(k1, cfg, with_mlp=False)
+    p["ln2"] = norm_params(cfg)
+    p["moe"] = moe_lib.moe_params(k2, cfg)
+    return p
+
+
+def _moe_block(p: Params, x, cfg: ModelConfig, positions, cache=None):
+    x, new_cache = _attn_block(p, x, cfg, positions, cache)
+    h = apply_norm(p["ln2"], x, cfg)
+    x = x + moe_lib.apply_moe(p["moe"], h, cfg)
+    return x, new_cache
+
+
+def _mamba_block_params(key, cfg: ModelConfig) -> Params:
+    return {"ln": norm_params(cfg), "mixer": ssm.mamba2_params(key, cfg)}
+
+
+def _mamba_block(p: Params, x, cfg: ModelConfig, state=None):
+    h = apply_norm(p["ln"], x, cfg)
+    y, new_state = ssm.mamba2_mixer(p["mixer"], h, cfg, state)
+    return x + y, new_state
+
+
+def _mlstm_block_params(key, cfg: ModelConfig) -> Params:
+    return {"ln": norm_params(cfg), "mixer": ssm.mlstm_params(key, cfg)}
+
+
+def _mlstm_block(p: Params, x, cfg: ModelConfig, state=None):
+    h = apply_norm(p["ln"], x, cfg)
+    y, new_state = ssm.mlstm_mixer(p["mixer"], h, cfg, state)
+    return x + y, new_state
+
+
+def _slstm_block_params(key, cfg: ModelConfig) -> Params:
+    return {"ln": norm_params(cfg), "mixer": ssm.slstm_params(key, cfg)}
+
+
+def _slstm_block(p: Params, x, cfg: ModelConfig, state=None):
+    h = apply_norm(p["ln"], x, cfg)
+    y, new_state = ssm.slstm_mixer(p["mixer"], h, cfg, state)
+    return x + y, new_state
+
+
+# ---------------------------------------------------------------------------
+# layer-group structure per architecture family
+# ---------------------------------------------------------------------------
+
+def _stack(key, n: int, make_fn) -> Params:
+    """Stack n block-param pytrees along a new leading axis (scan format)."""
+    keys = jax.random.split(key, n)
+    blocks = [make_fn(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model), jnp.float32)
+                  * cfg.d_model ** -0.5).astype(cfg.dtype),
+        "ln_f": norm_params(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[6], cfg.d_model, cfg.vocab, cfg.dtype)
+
+    if cfg.frontend in ("vision_stub", "audio_stub"):
+        # frontend stub: a learned projection applied to precomputed
+        # patch/frame embeddings supplied by input_specs()
+        p["frontend_proj"] = dense_init(ks[7], cfg.d_model, cfg.d_model, cfg.dtype)
+
+    if cfg.is_encoder_decoder:
+        p["encoder"] = _stack(ks[1], cfg.n_encoder_layers,
+                              lambda k: _attn_block_params(k, cfg))
+        p["decoder"] = _stack(ks[2], cfg.n_layers,
+                              lambda k: _attn_block_params(k, cfg, cross=True))
+        p["ln_enc"] = norm_params(cfg)
+        return p
+
+    if cfg.block_pattern == "attn":
+        if cfg.n_experts:
+            if cfg.n_dense_layers:
+                p["dense_layers"] = _stack(ks[1], cfg.n_dense_layers,
+                                           lambda k: _attn_block_params(k, cfg))
+            p["moe_layers"] = _stack(ks[2], cfg.n_layers - cfg.n_dense_layers,
+                                     lambda k: _moe_block_params(k, cfg))
+        else:
+            p["layers"] = _stack(ks[1], cfg.n_layers,
+                                 lambda k: _attn_block_params(k, cfg))
+    elif cfg.block_pattern == "mamba2_hybrid":
+        per = cfg.hybrid_attn_every
+        n_super, rem = divmod(cfg.n_layers, per)
+        p["mamba_layers"] = _stack(ks[1], n_super * per,
+                                   lambda k: _mamba_block_params(k, cfg))
+        if rem:
+            p["mamba_tail"] = _stack(ks[3], rem,
+                                     lambda k: _mamba_block_params(k, cfg))
+        # ONE shared attention block reused after every super-layer (zamba2)
+        p["shared_attn"] = _attn_block_params(ks[2], cfg)
+    elif cfg.block_pattern == "xlstm":
+        per = cfg.slstm_every
+        assert cfg.n_layers % per == 0, "xlstm layers must divide by slstm_every"
+        n_super = cfg.n_layers // per
+        p["mlstm_layers"] = _stack(ks[1], n_super * (per - 1),
+                                   lambda k: _mlstm_block_params(k, cfg))
+        p["slstm_layers"] = _stack(ks[2], n_super,
+                                   lambda k: _slstm_block_params(k, cfg))
+    else:
+        raise ValueError(cfg.block_pattern)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# scanned group application
+# ---------------------------------------------------------------------------
+
+def _scan_group(stacked: Params, x, fn, remat: bool = True):
+    """Run a stacked layer group as lax.scan over the leading axis (python
+    loop in accounting mode so cost_analysis sees every layer)."""
+    def pinned(layer_params, carry):
+        return shard_ctx.constrain_tokens(fn(layer_params, carry))
+
+    body = pinned
+    if remat:
+        body = jax.checkpoint(pinned)
+
+    if accounting.UNROLL_LAYERS:
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        for i in range(n):
+            x = body(jax.tree.map(lambda a: a[i], stacked), x)
+        return x
+
+    def step(carry, layer_params):
+        out = body(layer_params, carry)
+        return out, None
+
+    x, _ = jax.lax.scan(step, x, stacked)
+    return x
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            prefix_embeds: Optional[jax.Array] = None,
+            encoder_embeds: Optional[jax.Array] = None,
+            remat: bool = True, return_hidden: bool = False) -> jax.Array:
+    """Training/prefill forward -> logits (B, S, vocab), or the final hidden
+    states (B, S, D) with return_hidden=True (the fused-CE loss path computes
+    vocab projections chunk-by-chunk to avoid materializing fp32 logits).
+
+    prefix_embeds: VLM/audio stub frontend output prepended to the sequence.
+    encoder_embeds: enc-dec source-side embeddings (audio frames).
+    """
+    x = shard_ctx.constrain_tokens(
+        jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype))
+    if prefix_embeds is not None:
+        pe = (prefix_embeds.astype(cfg.dtype) @ params["frontend_proj"])
+        x = jnp.concatenate([pe, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+
+    if cfg.is_encoder_decoder:
+        enc = encoder_embeds.astype(cfg.dtype) @ params["frontend_proj"]
+        enc = _scan_group(
+            params["encoder"], enc,
+            lambda p, h: _attn_block(p, h, cfg, jnp.arange(enc.shape[1]),
+                                     causal=False)[0], remat)
+        enc = apply_norm(params["ln_enc"], enc, cfg)
+        x = _scan_group(
+            params["decoder"], x,
+            lambda p, h: _attn_block(p, h, cfg, positions, enc_out=enc)[0],
+            remat)
+    elif cfg.block_pattern == "attn":
+        if cfg.n_experts:
+            if cfg.n_dense_layers:
+                x = _scan_group(params["dense_layers"], x,
+                                lambda p, h: _attn_block(p, h, cfg, positions)[0],
+                                remat)
+            x = _scan_group(params["moe_layers"], x,
+                            lambda p, h: _moe_block(p, h, cfg, positions)[0],
+                            remat)
+        else:
+            x = _scan_group(params["layers"], x,
+                            lambda p, h: _attn_block(p, h, cfg, positions)[0],
+                            remat)
+    elif cfg.block_pattern == "mamba2_hybrid":
+        per = cfg.hybrid_attn_every
+        n_super = jax.tree.leaves(params["mamba_layers"])[0].shape[0] // per
+        # reshape stacked mamba params to (n_super, per, ...)
+        grouped = jax.tree.map(
+            lambda a: a.reshape(n_super, per, *a.shape[1:]),
+            params["mamba_layers"])
+
+        def super_layer(p_super, h):
+            def inner(pp, hh):
+                return _mamba_block(pp, hh, cfg)[0], None
+            h, _ = accounting.scan(lambda c, pp: inner(pp, c), h, p_super)
+            h, _ = _attn_block(params["shared_attn"], h, cfg, positions)
+            return h
+
+        x = _scan_group(grouped, x, super_layer, remat)
+        if "mamba_tail" in params:
+            x = _scan_group(params["mamba_tail"], x,
+                            lambda p, h: _mamba_block(p, h, cfg)[0], remat)
+    elif cfg.block_pattern == "xlstm":
+        per = cfg.slstm_every
+        n_super = jax.tree.leaves(params["slstm_layers"])[0].shape[0]
+        grouped_m = jax.tree.map(
+            lambda a: a.reshape(n_super, per - 1, *a.shape[1:]),
+            params["mlstm_layers"])
+
+        def super_layer(p_super, h):
+            pm, psl = p_super
+            h, _ = accounting.scan(lambda c, pp: (_mlstm_block(pp, c, cfg)[0], None),
+                                  h, pm)
+            h = _slstm_block(psl, h, cfg)[0]
+            return h
+
+        x = _scan_group((grouped_m, params["slstm_layers"]), x, super_layer, remat)
+    else:
+        raise ValueError(cfg.block_pattern)
+
+    x = apply_norm(params["ln_f"], x, cfg)
+    if return_hidden:
+        return x
+    head = params.get("lm_head")
+    if head is None:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(cfg.dtype))
+    else:
+        logits = x @ head
+    return logits.astype(jnp.float32)
+
+
+def lm_head_weight(params: Params, cfg: ModelConfig) -> jax.Array:
+    """(D, vocab) projection used by the fused loss."""
+    head = params.get("lm_head")
+    if head is None:
+        return params["embed"].astype(cfg.dtype).T
+    return head
+
+
+# ---------------------------------------------------------------------------
+# decode (serve) path — per-layer python loop over UNSTACKED params would
+# re-trace; instead we scan over layers carrying the cache pytree.
+# ---------------------------------------------------------------------------
+
+def decode_init(params: Params, cfg: ModelConfig, batch: int,
+                max_len: int) -> Dict[str, Any]:
+    """Preallocated cache/state pytree for one-token decode steps."""
+    def stack_caches(n, make):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[make() for _ in range(n)])
+
+    caches: Dict[str, Any] = {}
+    if cfg.is_encoder_decoder:
+        caches["decoder"] = stack_caches(
+            cfg.n_layers, lambda: attn.make_kv_cache(cfg, batch, max_len))
+        return caches
+    if cfg.block_pattern == "attn":
+        n_dense = cfg.n_dense_layers if cfg.n_experts else 0
+        if cfg.n_experts:
+            if n_dense:
+                caches["dense"] = stack_caches(
+                    n_dense, lambda: attn.make_kv_cache(cfg, batch, max_len))
+            caches["moe"] = stack_caches(
+                cfg.n_layers - n_dense,
+                lambda: attn.make_kv_cache(cfg, batch, max_len))
+        else:
+            caches["layers"] = stack_caches(
+                cfg.n_layers, lambda: attn.make_kv_cache(cfg, batch, max_len))
+    elif cfg.block_pattern == "mamba2_hybrid":
+        per = cfg.hybrid_attn_every
+        n_super, rem = divmod(cfg.n_layers, per)
+        caches["mamba"] = stack_caches(n_super * per,
+                                       lambda: ssm.mamba2_state(cfg, batch))
+        if rem:
+            caches["mamba_tail"] = stack_caches(rem,
+                                                lambda: ssm.mamba2_state(cfg, batch))
+        caches["shared_attn"] = stack_caches(
+            n_super, lambda: attn.make_kv_cache(cfg, batch, max_len))
+    elif cfg.block_pattern == "xlstm":
+        per = cfg.slstm_every
+        n_super = cfg.n_layers // per
+        caches["mlstm"] = stack_caches(n_super * (per - 1),
+                                       lambda: ssm.mlstm_state(cfg, batch))
+        caches["slstm"] = stack_caches(n_super,
+                                       lambda: ssm.slstm_state(cfg, batch))
+    return caches
+
+
+def decode_step(params: Params, caches: Dict[str, Any], tokens: jax.Array,
+                position: jax.Array, cfg: ModelConfig,
+                encoder_out: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One decode step: tokens (B, 1) -> logits (B, vocab), updated caches."""
+    x = shard_ctx.constrain_tokens(
+        jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype))
+    positions = position[None] if position.ndim == 0 else position
+
+    def scan_layers(stacked_params, stacked_cache, x, block_fn):
+        if accounting.UNROLL_LAYERS:
+            n = jax.tree.leaves(stacked_params)[0].shape[0]
+            new_cs = []
+            for i in range(n):
+                x, nc = block_fn(jax.tree.map(lambda a: a[i], stacked_params),
+                                 x, jax.tree.map(lambda a: a[i], stacked_cache))
+                new_cs.append(nc)
+            return x, jax.tree.map(lambda *xs: jnp.stack(xs), *new_cs)
+
+        def step(carry, pc):
+            lp, lc = pc
+            out, new_c = block_fn(lp, carry, lc)
+            return out, new_c
+        x, new_caches = jax.lax.scan(step, x, (stacked_params, stacked_cache))
+        return x, new_caches
+
+    new_caches = dict(caches)
+    if cfg.is_encoder_decoder:
+        x, new_caches["decoder"] = scan_layers(
+            params["decoder"], caches["decoder"], x,
+            lambda lp, h, lc: _attn_block(lp, h, cfg, positions, cache=lc,
+                                          enc_out=encoder_out))
+    elif cfg.block_pattern == "attn":
+        if cfg.n_experts:
+            if cfg.n_dense_layers:
+                x, new_caches["dense"] = scan_layers(
+                    params["dense_layers"], caches["dense"], x,
+                    lambda lp, h, lc: _attn_block(lp, h, cfg, positions, cache=lc))
+            x, new_caches["moe"] = scan_layers(
+                params["moe_layers"], caches["moe"], x,
+                lambda lp, h, lc: _moe_block(lp, h, cfg, positions, cache=lc))
+        else:
+            x, new_caches["layers"] = scan_layers(
+                params["layers"], caches["layers"], x,
+                lambda lp, h, lc: _attn_block(lp, h, cfg, positions, cache=lc))
+    elif cfg.block_pattern == "mamba2_hybrid":
+        per = cfg.hybrid_attn_every
+        n_super = jax.tree.leaves(caches["shared_attn"])[0].shape[0]
+        grouped_p = jax.tree.map(
+            lambda a: a.reshape(n_super, per, *a.shape[1:]), params["mamba_layers"])
+        grouped_c = jax.tree.map(
+            lambda a: a.reshape(n_super, per, *a.shape[1:]), caches["mamba"])
+
+        def super_step(carry, pc):
+            h = carry
+            (pm, cm), ca = pc
+
+            def inner(c, pcc):
+                pp, cc = pcc
+                out, nc = _mamba_block(pp, c, cfg, state=cc)
+                return out, nc
+            h, new_cm = accounting.scan(inner, h, (pm, cm))
+            h, new_ca = _attn_block(params["shared_attn"], h, cfg, positions,
+                                    cache=ca)
+            return h, (new_cm, new_ca)
+
+        x, (new_cm, new_ca) = accounting.scan(
+            super_step, x, ((grouped_p, grouped_c), caches["shared_attn"]))
+        new_caches["mamba"] = jax.tree.map(
+            lambda a: a.reshape(n_super * per, *a.shape[2:]), new_cm)
+        new_caches["shared_attn"] = new_ca
+        if "mamba_tail" in params:
+            x, new_caches["mamba_tail"] = scan_layers(
+                params["mamba_tail"], caches["mamba_tail"], x,
+                lambda lp, h, lc: _mamba_block(lp, h, cfg, state=lc))
+    elif cfg.block_pattern == "xlstm":
+        per = cfg.slstm_every
+        n_super = jax.tree.leaves(caches["slstm"])[0].shape[0]
+        grouped_p = jax.tree.map(
+            lambda a: a.reshape(n_super, per - 1, *a.shape[1:]),
+            params["mlstm_layers"])
+        grouped_c = jax.tree.map(
+            lambda a: a.reshape(n_super, per - 1, *a.shape[1:]), caches["mlstm"])
+
+        def super_step(carry, pc):
+            h = carry
+            (pm, cm), (psl, csl) = pc
+
+            def inner(c, pcc):
+                pp, cc = pcc
+                out, nc = _mlstm_block(pp, c, cfg, state=cc)
+                return out, nc
+            h, new_cm = accounting.scan(inner, h, (pm, cm))
+            h, new_csl = _slstm_block(psl, h, cfg, state=csl)
+            return h, (new_cm, new_csl)
+
+        x, (new_cm, new_csl) = accounting.scan(
+            super_step, x,
+            ((grouped_p, grouped_c), (params["slstm_layers"], caches["slstm"])))
+        new_caches["mlstm"] = jax.tree.map(
+            lambda a: a.reshape(n_super * (per - 1), *a.shape[2:]), new_cm)
+        new_caches["slstm"] = new_csl
+
+    x = apply_norm(params["ln_f"], x, cfg)
+    head = params.get("lm_head")
+    if head is None:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(cfg.dtype))
+    else:
+        logits = x @ head
+    return logits[:, -1].astype(jnp.float32), new_caches

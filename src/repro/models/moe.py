@@ -1,0 +1,142 @@
+"""Mixture-of-Experts layer (DeepSeek-V2 / DeepSeekMoE style: fine-grained
+routed experts + always-on shared experts, top-k routing).
+
+Dispatch is capacity-bounded one-hot einsum (Switch-style) so the layer is a
+pure dense-algebra SPMD program: with experts sharded over the 'model' axis
+(EP), the dispatch/combine einsums lower to the all-to-all-ish collectives XLA
+picks, and every expert GEMM is a regular (E_local, capacity, d) x
+(E_local, d, f) batched matmul — exactly the irregular-N GEMM class the
+paper's Insight 3 routes to split-K schedules. Overflowing tokens are dropped
+(capacity_factor bounds the buffer, the standard trade-off).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Params, activation, dense_init, mlp_params
+
+
+def moe_params(key, cfg: ModelConfig) -> Params:
+    k_router, k_shared, k_experts = jax.random.split(key, 3)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(k_experts, 3)
+    scale = d ** -0.5
+    p = {
+        "router": dense_init(k_router, d, e, jnp.float32),
+        "experts": {
+            "gate": (jax.random.normal(ks[0], (e, d, f), jnp.float32) * scale).astype(cfg.dtype),
+            "up": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale).astype(cfg.dtype),
+            "down": (jax.random.normal(ks[2], (e, f, d), jnp.float32) * (f ** -0.5)).astype(cfg.dtype),
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_params(k_shared, cfg,
+                                 d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+    return p
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    cap = int(tokens * cfg.moe_top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(cap, 4)
+
+
+_GROUP_TOKENS = 512   # dispatch-group size; the einsum dispatch costs
+                      # O(E * cap) = O(k * cf * GROUP_TOKENS) MACs per token,
+                      # so small fixed groups keep routing overhead ~10-15% of
+                      # the expert GEMMs regardless of global batch.
+
+
+def _dp_groups(t: int) -> int:
+    """Dispatch groups: fixed-size token groups (per-group capacity — the
+    standard EP formulation computes routing positions within a local shard).
+    The group count is kept a multiple of the DP shard count so the group dim
+    shards cleanly over dp; the dispatch tensor is (G, TL, E, cap) — sharded
+    (dp, -, EP, -) it stays small per device instead of the global-capacity
+    O(T^2 k / E) blow-up."""
+    from repro.models import shard_ctx
+    mesh = shard_ctx.get_mesh()
+    dp = 1
+    if mesh is not None:
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                dp *= mesh.shape[a]
+    if t % dp:
+        dp = 1
+    g = dp
+    while t % (g * 2) == 0 and t // (g * 2) >= _GROUP_TOKENS:
+        g *= 2
+    return g
+
+
+def _constrain(x: jax.Array, *spec) -> jax.Array:
+    from repro.models import shard_ctx
+    mesh = shard_ctx.get_mesh()
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    resolved = [dp if s == "dp" else s for s in spec]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))
+
+
+def apply_moe(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.moe_top_k
+    g = _dp_groups(t)
+    tl = t // g
+    cap = _capacity(tl, cfg)
+    xt = _constrain(x.reshape(g, tl, d), "dp", None, None)
+
+    gates = jax.nn.softmax(
+        xt.astype(jnp.float32) @ p["router"], axis=-1)                # (G,TL,E)
+    topv, topi = jax.lax.top_k(gates, k)                              # (G,TL,k)
+    topv = topv / jnp.clip(topv.sum(-1, keepdims=True), 1e-9)         # renorm
+
+    # position of each (token, choice) inside its expert's per-group buffer
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.int32)                 # (G,TL,k,E)
+    flat = onehot.reshape(g, tl * k, e)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1
+    pos = pos.reshape(g, tl, k, e)
+    pos_tk = (pos * onehot).sum(-1)                                   # (G,TL,k)
+    within = (pos_tk >= 0) & (pos_tk < cap)
+    pos_c = jnp.clip(pos_tk, 0, cap - 1)
+
+    # one-hot einsum dispatch. §Perf iteration 10 tried scatter/gather
+    # dispatch instead (moves exactly T*k D-vectors, no (G,TL,E,cap) tensor):
+    # REFUTED on the 512-device mesh — XLA cannot partition the scatter over
+    # the expert axis and replicates the updates (deepseek-v2 train peak went
+    # 152 -> 639 GB/dev, collective term 6 -> 347 s). The einsum form stays
+    # SPMD-friendly because every op is dense contraction.
+    within_f = within[..., None].astype(x.dtype)
+    oh_cap = jax.nn.one_hot(pos_c, cap, dtype=x.dtype)                # (G,TL,k,cap)
+    sel = onehot.astype(x.dtype) * within_f                           # (G,TL,k,E)
+    disp = jnp.einsum("gtke,gtkc->gtec", sel, oh_cap)                 # (G,TL,E,cap)
+    disp = _constrain(disp, "dp", None, "model", None)
+    comb = jnp.einsum("gtke,gtkc->gtec",
+                      sel.astype(jnp.float32) * topv[..., None],
+                      oh_cap.astype(jnp.float32))
+    comb = _constrain(comb, "dp", None, "model", None)
+
+    # dispatch is local per (dp-group x expert-shard); expert GEMMs are
+    # batched over (G, E) — sharded (dp, EP) so per-device work is 1/(dp*ep).
+    xe = jnp.einsum("gtec,gtd->gecd", disp, xt)                       # (G,E,cap,D)
+    xe = _constrain(xe, "dp", "model", None, None)
+    h = activation(cfg,
+                   jnp.einsum("gecd,edf->gecf", xe, p["experts"]["gate"]),
+                   jnp.einsum("gecd,edf->gecf", xe, p["experts"]["up"]))
+    h = _constrain(h, "dp", "model", None, None)
+    ye = jnp.einsum("gecf,efd->gecd", h, p["experts"]["down"])        # (G,E,cap,D)
+    ye = _constrain(ye, "dp", "model", None, None)
+    out = jnp.einsum("gtec,gecd->gtd", comb.astype(x.dtype), ye)
+    out = _constrain(out, "dp", None, None)
+
+    if cfg.n_shared_experts:
+        sh = activation(cfg, xt @ p["shared"]["gate"], xt @ p["shared"]["up"])
+        out = out + sh @ p["shared"]["down"]
+    return out.reshape(b, s, d)

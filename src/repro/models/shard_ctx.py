@@ -1,0 +1,48 @@
+"""Activation-sharding context: pins the residual stream's layout.
+
+Without explicit constraints XLA's sharding propagation may legally trade
+batch sharding for contraction sharding on FSDP weights (each device then
+computes the FULL batch through a weight slice — same matmul FLOPs, but every
+downstream op replicates over the data axis; observed 2-4x compute inflation
+on the production mesh). Pinning `(batch=dp, seq=None, d_model=None)` at
+every block boundary keeps the program in the intended DP x TP regime — this
+is DiT's data-layout control (paper §3.2) applied to activations.
+
+The mesh is set by the launcher before tracing; smoke tests that trace with
+no mesh set are unaffected (constraints become no-ops).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def _dp(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def constrain_tokens(x: jax.Array) -> jax.Array:
+    """(B, S, D) or (B, S): batch over the DP axes when it divides."""
+    if _MESH is None:
+        return x
+    dp = _dp(_MESH)
+    size = 1
+    for a in dp:
+        size *= _MESH.shape[a]
+    if x.shape[0] % size:
+        return x
+    spec = P(dp, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))

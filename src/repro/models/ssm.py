@@ -1,0 +1,354 @@
+"""State-space / recurrent mixers: Mamba2 (SSD chunked scan), mLSTM and sLSTM
+(xLSTM). These are the sub-quadratic blocks that make `long_500k` decode
+feasible (DESIGN.md §4): training/prefill uses chunked-parallel forms, decode
+carries O(1) recurrent state.
+
+The paper's GEMM schedules apply to the in/out projections (regular GEMMs);
+the scan itself is not a GEMM and is noted as out-of-scope for DiT scheduling
+in DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, Params, dense_init
+
+CHUNK = 128
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+def mamba2_params(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_inner = 2 * d
+    n_heads = d_inner // cfg.mamba_headdim
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 5)
+    return {
+        # fused in-projection: [z, x, B, C, dt]
+        "w_in": dense_init(ks[0], d, 2 * d_inner + 2 * n + n_heads, cfg.dtype),
+        "conv": (jax.random.normal(ks[1], (4, d_inner + 2 * n), jnp.float32)
+                 * 0.1).astype(cfg.dtype),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "w_out": dense_init(ks[2], d_inner, d, cfg.dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv, kernel 4. x: (B, S, C); state: (B, 3, C)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out), xp[:, -(k - 1):]
+
+
+def _ssd_chunked(xh: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                 c: jax.Array, h0: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan. xh: (B,S,H,P); dt: (B,S,H); a: (H) negative; b/c: (B,S,N).
+    Returns (y: (B,S,H,P), final state (B,H,N,P))."""
+    from repro.models import accounting
+    bb, s, h, p = xh.shape
+    n = b.shape[-1]
+    L = min(accounting.chunk(CHUNK), s)
+    nc = s // L
+    assert nc * L == s, f"seq {s} must divide by chunk {L}"
+
+    la = dt * a[None, None, :]                       # log-decay per step (B,S,H)
+    la = la.reshape(bb, nc, L, h)
+    xc = xh.reshape(bb, nc, L, h, p)
+    dtc = dt.reshape(bb, nc, L, h)
+    bc = b.reshape(bb, nc, L, n)
+    cc = c.reshape(bb, nc, L, n)
+
+    cum = jnp.cumsum(la, axis=2)                     # (B,nc,L,H) inclusive
+    # within-chunk: y_j = sum_{i<=j} exp(cum_j - cum_i) * (C_j.B_i) dt_i x_i
+    att = jnp.einsum("bzjn,bzin->bzji", cc, bc,
+                     preferred_element_type=jnp.float32)      # (B,nc,L,L)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,nc,L,L,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    w = jnp.where(mask[None, None, :, :, None], jnp.exp(decay), 0.0)
+    w = w * att[..., None]                                      # (B,nc,L,L,H)
+    y_intra = jnp.einsum("bzjih,bzih,bzihp->bzjhp", w, dtc.astype(jnp.float32),
+                         xc.astype(jnp.float32))
+
+    # chunk summaries: S_z = sum_i exp(cum_last - cum_i) dt_i (B_i x x_i)
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)                    # (B,nc,L,H)
+    s_z = jnp.einsum("bzih,bzih,bzin,bzihp->bzhnp",
+                     tail, dtc.astype(jnp.float32), bc.astype(jnp.float32),
+                     xc.astype(jnp.float32))                   # (B,nc,H,N,P)
+
+    # scan over chunks: h_z = exp(cum_last_z) h_{z-1} + S_z
+    gain = jnp.exp(cum[:, :, -1, :])                           # (B,nc,H)
+
+    def step(hprev, zs):
+        g, sz = zs
+        hnew = g[..., None, None] * hprev + sz
+        return hnew, hprev
+
+    init = (jnp.zeros((bb, h, n, p), jnp.float32) if h0 is None
+            else h0.astype(jnp.float32))
+    hlast, hprevs = accounting.scan(step, init,
+                                    (gain.swapaxes(0, 1), s_z.swapaxes(0, 1)))
+    hprevs = hprevs.swapaxes(0, 1)                             # (B,nc,H,N,P)
+
+    # inter-chunk: y_j += exp(cum_j) C_j . h_prev
+    y_inter = jnp.einsum("bzjh,bzjn,bzhnp->bzjhp",
+                         jnp.exp(cum), cc.astype(jnp.float32), hprevs)
+    y = (y_intra + y_inter).reshape(bb, s, h, p)
+    return y.astype(xh.dtype), hlast
+
+
+def mamba2_mixer(p: Params, x: jax.Array, cfg: ModelConfig,
+                 state: Optional[Dict[str, jax.Array]] = None
+                 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: (B,S,D). With `state`, runs recurrently (decode, any S>=1)."""
+    bsz, s, d = x.shape
+    d_inner = 2 * d
+    n = cfg.ssm_state
+    h = d_inner // cfg.mamba_headdim
+    ph = cfg.mamba_headdim
+
+    proj = x @ p["w_in"]
+    z, xr, b, c, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xr, b, c], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv"],
+                                        None if state is None else state["conv"])
+    xr, b, c = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                       # (H,)
+    xh = xr.reshape(bsz, s, h, ph)
+
+    if state is None:
+        y, hlast = _ssd_chunked(xh, dt, a, b, c)
+        new_state = None
+    else:
+        # recurrent path: exact scan, O(S) small steps (decode S is 1)
+        def step(hprev, ins):
+            xt, dtt, bt, ct = ins
+            g = jnp.exp(dtt * a)                                   # (B,H)
+            upd = jnp.einsum("bh,bn,bhp->bhnp", dtt, bt.astype(jnp.float32),
+                             xt.astype(jnp.float32))
+            hnew = g[..., None, None] * hprev + upd
+            yt = jnp.einsum("bn,bhnp->bhp", ct.astype(jnp.float32), hnew)
+            return hnew, yt
+
+        hlast, ys = jax.lax.scan(
+            step, state["h"].astype(jnp.float32),
+            (xh.swapaxes(0, 1), dt.swapaxes(0, 1),
+             b.swapaxes(0, 1), c.swapaxes(0, 1)))
+        y = ys.swapaxes(0, 1).astype(x.dtype)
+        new_state = {"h": hlast, "conv": conv_state}
+
+    y = y + xh * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, s, d_inner) * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    if state is None:
+        return out, None
+    return out, new_state
+
+
+def mamba2_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    d_inner = 2 * cfg.d_model
+    h = d_inner // cfg.mamba_headdim
+    return {
+        "h": jnp.zeros((batch, h, cfg.ssm_state, cfg.mamba_headdim), jnp.float32),
+        "conv": jnp.zeros((batch, 3, d_inner + 2 * cfg.ssm_state), cfg.dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory)
+# ---------------------------------------------------------------------------
+
+def mlstm_params(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_inner = 2 * d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_up": dense_init(ks[0], d, 2 * d_inner, cfg.dtype),
+        "w_q": dense_init(ks[1], d_inner, d_inner, cfg.dtype),
+        "w_k": dense_init(ks[2], d_inner, d_inner, cfg.dtype),
+        "w_v": dense_init(ks[3], d_inner, d_inner, cfg.dtype),
+        "w_gates": dense_init(ks[4], d, 2 * cfg.n_heads, jnp.float32),
+        "w_down": dense_init(ks[5], d_inner, d, cfg.dtype),
+    }
+
+
+def mlstm_mixer(p: Params, x: jax.Array, cfg: ModelConfig,
+                state: Optional[Dict[str, jax.Array]] = None
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Parallel (stabilized) form for training/prefill; recurrent for decode."""
+    bsz, s, d = x.shape
+    h = cfg.n_heads
+    d_inner = 2 * d
+    hd = d_inner // h
+
+    up = x @ p["w_up"]
+    u, gate = jnp.split(up, 2, axis=-1)
+    q = (u @ p["w_q"]).reshape(bsz, s, h, hd)
+    k = (u @ p["w_k"]).reshape(bsz, s, h, hd) * hd ** -0.5
+    v = (u @ p["w_v"]).reshape(bsz, s, h, hd)
+    gates = (x.astype(jnp.float32) @ p["w_gates"]).reshape(bsz, s, h, 2)
+    i_pre, f_pre = gates[..., 0], gates[..., 1]
+    logf = jax.nn.log_sigmoid(f_pre)                        # (B,S,H)
+
+    if state is None:
+        # chunkwise-stabilized parallel form: within-chunk (L x L) decay
+        # matrix + carried (C, n, m) state across chunks — the mLSTM analogue
+        # of the SSD chunked scan; never materializes (S x S).
+        from repro.models import accounting
+        L = min(accounting.chunk(CHUNK), s)
+        nc = s // L
+        assert nc * L == s, f"seq {s} must divide by chunk {L}"
+        qc = q.reshape(bsz, nc, L, h, hd).astype(jnp.float32)
+        kc = k.reshape(bsz, nc, L, h, hd).astype(jnp.float32)
+        vc = v.reshape(bsz, nc, L, h, hd).astype(jnp.float32)
+        ic = i_pre.reshape(bsz, nc, L, h)
+        fc = logf.reshape(bsz, nc, L, h)
+
+        tril = jnp.tril(jnp.ones((L, L), bool))
+
+        def chunk_step(carry, ins):
+            Ch, nh, mc = carry                        # (B,H,dk,dv),(B,H,dk),(B,H)
+            qz, kz, vz, iz, fz = ins                  # (B,L,H,*)
+            F = jnp.cumsum(fz, axis=1)                # (B,L,H) inclusive
+            # intra-chunk log-weights: F_j - F_i + i_i  (i <= j)
+            dlog = F[:, :, None, :] - F[:, None, :, :] + iz[:, None, :, :]
+            dlog = jnp.where(tril[None, :, :, None], dlog, -jnp.inf)
+            m_intra = jnp.max(dlog, axis=2)           # (B,L,H)
+            m_inter = F + mc[:, None, :]              # (B,L,H)
+            m_j = jnp.maximum(m_intra, m_inter)
+            w = jnp.exp(dlog - m_j[:, :, None, :])    # (B,L,L,H)
+            att = jnp.einsum("bjhd,bihd->bjih", qz, kz)
+            num = jnp.einsum("bjih,bjih,bihd->bjhd", att, w, vz)
+            den = jnp.einsum("bjih,bjih->bjh", att, w)
+            # carried-state contribution
+            g_j = jnp.exp(m_inter - m_j)              # (B,L,H)
+            num = num + g_j[..., None] * jnp.einsum("bjhd,bhde->bjhe", qz, Ch)
+            den = den + g_j * jnp.einsum("bjhd,bhd->bjh", qz, nh)
+            yz = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_j))[..., None]
+            # carry update to end of chunk
+            F_L = F[:, -1, :]                         # (B,H)
+            tail = F_L[:, None, :] - F + iz           # (B,L,H)
+            m_new = jnp.maximum(F_L + mc, jnp.max(tail, axis=1))
+            wu = jnp.exp(tail - m_new[:, None, :])
+            Ch = (jnp.exp(F_L + mc - m_new)[..., None, None] * Ch
+                  + jnp.einsum("bih,bihd,bihe->bhde", wu, kz, vz))
+            nh = (jnp.exp(F_L + mc - m_new)[..., None] * nh
+                  + jnp.einsum("bih,bihd->bhd", wu, kz))
+            return (Ch, nh, m_new), yz
+
+        Ch0 = jnp.zeros((bsz, h, hd, hd), jnp.float32)
+        nh0 = jnp.zeros((bsz, h, hd), jnp.float32)
+        mc0 = jnp.full((bsz, h), -1e30, jnp.float32)
+        _, ys = accounting.scan(chunk_step, (Ch0, nh0, mc0),
+                                (qc.swapaxes(0, 1), kc.swapaxes(0, 1),
+                                 vc.swapaxes(0, 1), ic.swapaxes(0, 1),
+                                 fc.swapaxes(0, 1)))
+        y = ys.swapaxes(0, 1).reshape(bsz, s, h, hd).astype(x.dtype)
+        new_state = None
+    else:
+        def step(carry, ins):
+            cm, nv, mm = carry
+            qt, kt, vt, it, lft = ins
+            mnew = jnp.maximum(lft + mm, it)
+            fi = jnp.exp(lft + mm - mnew)
+            ii = jnp.exp(it - mnew)
+            cm = fi[..., None, None] * cm + ii[..., None, None] * \
+                jnp.einsum("bhd,bhe->bhde", kt.astype(jnp.float32),
+                           vt.astype(jnp.float32))
+            nv = fi[..., None] * nv + ii[..., None] * kt.astype(jnp.float32)
+            num = jnp.einsum("bhd,bhde->bhe", qt.astype(jnp.float32), cm)
+            den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh",
+                                                 qt.astype(jnp.float32), nv)),
+                              jnp.exp(-mnew))
+            return (cm, nv, mnew), num / den[..., None]
+
+        carry = (state["c"], state["n"], state["m"])
+        (cm, nv, mm), ys = jax.lax.scan(
+            step, carry,
+            (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+             i_pre.swapaxes(0, 1), logf.swapaxes(0, 1)))
+        y = ys.swapaxes(0, 1).astype(x.dtype)
+        new_state = {"c": cm, "n": nv, "m": mm}
+
+    y = y.reshape(bsz, s, d_inner) * jax.nn.silu(gate)
+    return y @ p["w_down"], new_state
+
+
+def mlstm_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    h = cfg.n_heads
+    hd = 2 * cfg.d_model // h
+    return {
+        "c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def slstm_params(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(ks[0], d, 4 * d, cfg.dtype),      # i, f, z, o
+        "r": (jax.random.normal(ks[1], (h, hd, 4 * hd), jnp.float32)
+              * hd ** -0.5).astype(jnp.float32),
+        "w_out": dense_init(ks[2], d, d, cfg.dtype),
+    }
+
+
+def slstm_mixer(p: Params, x: jax.Array, cfg: ModelConfig,
+                state: Optional[Dict[str, jax.Array]] = None
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Strictly recurrent (block-diagonal recurrence) — scanned over time."""
+    bsz, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    pre_all = (x @ p["w_in"]).reshape(bsz, s, h, 4 * hd).astype(jnp.float32)
+
+    def step4(carry, pre_t):
+        c, n, m, hid = carry
+        rec = jnp.einsum("bhd,hde->bhe", hid, p["r"])
+        it, ft, zt, ot = jnp.split(pre_t + rec, 4, axis=-1)
+        mnew = jnp.maximum(ft + m, it)
+        i = jnp.exp(it - mnew)
+        f = jnp.exp(ft + m - mnew)
+        c = f * c + i * jnp.tanh(zt)
+        n = f * n + i
+        hid = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+        return (c, n, mnew, hid), hid
+
+    if state is None:
+        z = jnp.zeros((bsz, h, hd), jnp.float32)
+        carry = (z, z, jnp.full((bsz, h, hd), -1e30, jnp.float32), z)
+    else:
+        carry = (state["c"], state["n"], state["m"], state["h"])
+    carry, ys = jax.lax.scan(step4, carry, pre_all.swapaxes(0, 1))
+    y = ys.swapaxes(0, 1).reshape(bsz, s, d).astype(x.dtype)
+    new_state = None if state is None else {
+        "c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3]}
+    return y @ p["w_out"], new_state
+
+
+def slstm_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, h, hd), -1e30, jnp.float32),
+            "h": z}

@@ -1,0 +1,5 @@
+from repro.sim.perf import PerfReport, estimate
+from repro.sim.softhier import FunctionalSim, SimResult, run_gemm, verify_gemm
+
+__all__ = ["PerfReport", "estimate", "FunctionalSim", "SimResult",
+           "run_gemm", "verify_gemm"]

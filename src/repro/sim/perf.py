@@ -1,0 +1,206 @@
+"""SoftHier performance model (paper §2.1 'cycle-accurate analysis').
+
+Prices a BSP `Program` on an `AcceleratorConfig`. Per superstep the three
+resource classes are priced independently and combined with BSP max semantics
+(compute, DMA and NoC phases overlap inside a superstep by construction —
+builders emit serialized supersteps when a schedule disables double
+buffering):
+
+- **compute**: per-tile matrix-engine time. The engine is a ce_rows x ce_cols
+  MAC array; an MMAD over (TM x TN x TK) issues ceil(TM/ce_rows) *
+  ceil(TN/ce_cols) output chunks, each pipelined over TK with a
+  (ce_rows + ce_cols)-cycle fill — this reproduces the paper's observation
+  that TN = 66 tiles reach only ~50% engine utilization while TN = 528 tiles
+  are efficient (§4.1.3). L1 feed bandwidth is a secondary bound.
+- **DMA**: HBM-channel contention. Each DMA's bytes land on the channel given
+  by the matrix's DataLayout; a superstep's DMA time is the busiest channel's
+  bytes / channel_bw (channels operate in parallel — exactly why the paper's
+  optimized split scheme helps) plus the busiest tile's L1 port time.
+- **NoC**: collectives are priced on a dimension-ordered multicast/reduce tree
+  (vertical distribution on the source column + horizontal distribution along
+  each spanned row); every spanned link resource accumulates bytes and the
+  busiest resource bounds the phase. P2P ops charge the links on their
+  dimension-ordered route. Hardware collectives traverse links once —
+  the mask-based broadcast of §2.1.
+
+The model is calibrated analytically (no RTL); all constants come from
+`AcceleratorConfig`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, List, Tuple
+
+from repro.core.ir import DMAOp, MMADOp, MulticastOp, P2POp, Program, ReduceOp
+from repro.core.masks import TileGroup
+from repro.hw.config import AcceleratorConfig
+
+
+@functools.lru_cache(maxsize=16384)
+def _members(group: TileGroup, grid: Tuple[int, int]) -> Tuple[Tuple[int, int], ...]:
+    return tuple(group.members(grid))
+
+
+@dataclasses.dataclass
+class PerfReport:
+    total_time: float
+    compute_time: float
+    dma_time: float
+    noc_time: float
+    barrier_time: float
+    total_flops: int
+    hbm_bytes: int
+    noc_bytes: int
+    n_supersteps: int
+
+    @property
+    def achieved_flops(self) -> float:
+        return self.total_flops / self.total_time if self.total_time else 0.0
+
+    def utilization(self, hw: AcceleratorConfig) -> float:
+        return self.achieved_flops / hw.peak_flops
+
+    @property
+    def intensity(self) -> float:
+        return self.total_flops / self.hbm_bytes if self.hbm_bytes else math.inf
+
+    def bw_utilization(self, hw: AcceleratorConfig) -> float:
+        return (self.hbm_bytes / self.total_time) / hw.hbm.total_bw if self.total_time else 0.0
+
+    def summary(self, hw: AcceleratorConfig) -> str:
+        return (f"time={self.total_time*1e6:.1f}us "
+                f"TFLOPS={self.achieved_flops/1e12:.1f} "
+                f"util={self.utilization(hw)*100:.1f}% "
+                f"AI={self.intensity:.1f} "
+                f"bw={self.bw_utilization(hw)*100:.1f}% "
+                f"steps={self.n_supersteps}")
+
+
+def _engine_time(op: MMADOp, hw: AcceleratorConfig) -> float:
+    t = hw.tile
+    chunks = math.ceil(op.tm / t.ce_rows) * math.ceil(op.tn / t.ce_cols)
+    cycles = chunks * (op.tk + t.ce_rows + t.ce_cols)
+    engine = cycles / t.clock_hz
+    feed_bytes = (op.tm * op.tk + op.tk * op.tn) * t.elem_bytes
+    return max(engine, feed_bytes / t.l1_bw)
+
+
+def estimate(prog: Program, hw: AcceleratorConfig) -> PerfReport:
+    elem = {"int8": 1, "float16": 2, "float32": 4}
+    grid = prog.grid
+    barrier = (grid[0] + grid[1]) * hw.noc.hop_latency_cycles / hw.tile.clock_hz
+
+    tot = comp_t = dma_t = noc_t = 0.0
+    flops = 0
+    hbm_bytes = 0
+    noc_bytes = 0
+
+    buf_bytes = {name: decl.shape[0] * decl.shape[1] * elem[decl.dtype]
+                 for name, decl in prog.buffers.items()}
+
+    for step in prog.supersteps:
+        # -- compute phase
+        per_tile: Dict[Tuple[int, int], float] = {}
+        for op in step.compute:
+            per_tile[op.tile] = per_tile.get(op.tile, 0.0) + _engine_time(op, hw)
+            flops += 2 * op.tm * op.tn * op.tk
+        c_time = max(per_tile.values(), default=0.0)
+
+        # -- DMA phase: channel + L1-port contention
+        chan_bytes: Dict[int, int] = {}
+        tile_bytes: Dict[Tuple[int, int], int] = {}
+        # -- NoC phase: link-resource contention
+        row_res: Dict[int, int] = {}
+        col_res: Dict[int, int] = {}
+        link_res: Dict[Tuple[Tuple[int, int], Tuple[int, int]], int] = {}
+        local_res: Dict[Tuple[int, int], int] = {}
+        max_hop_lat = 0.0
+
+        for op in step.comm:
+            if isinstance(op, DMAOp):
+                if op.matrix == "C":
+                    # C commits at the deployment element size (the L1
+                    # accumulator stays fp32, so buf_bytes would overcount).
+                    tm, tn, _ = prog.tile_shape
+                    nbytes = tm * tn * prog.elem_bytes
+                else:
+                    nbytes = buf_bytes[op.buf]
+                layout = prog.layouts[op.matrix]
+                mshape = _matrix_shape(prog, op.matrix)
+                ch = layout.channel_of_tile(*op.tile_coord, mshape)
+                chan_bytes[ch] = chan_bytes.get(ch, 0) + nbytes
+                tile_bytes[op.tile] = tile_bytes.get(op.tile, 0) + nbytes
+                hbm_bytes += nbytes
+            elif isinstance(op, (MulticastOp, ReduceOp)):
+                nbytes = buf_bytes[op.buf]
+                anchor = op.src if isinstance(op, MulticastOp) else op.dst
+                members = _members(op.group, grid)
+                rows = sorted({i for i, _ in members})
+                cols = sorted({j for _, j in members})
+                # dimension-ordered tree: vertical leg on the anchor column,
+                # horizontal leg along each spanned row.
+                if len(rows) > 1:
+                    col_res[anchor[1]] = col_res.get(anchor[1], 0) + nbytes
+                if len(cols) > 1:
+                    for r in rows:
+                        row_res[r] = row_res.get(r, 0) + nbytes
+                hops = (rows[-1] - rows[0]) + (cols[-1] - cols[0])
+                max_hop_lat = max(max_hop_lat,
+                                  hops * hw.noc.hop_latency_cycles / hw.tile.clock_hz)
+                noc_bytes += nbytes * max(1, len(members) - 1)
+            elif isinstance(op, P2POp):
+                nbytes = buf_bytes[op.buf]
+                if op.src == op.dst:
+                    local_res[op.src] = local_res.get(op.src, 0) + nbytes
+                    continue
+                # dimension-ordered route: along the row, then the column
+                (si, sj), (di, dj) = op.src, op.dst
+                for j in range(min(sj, dj), max(sj, dj)):
+                    link_res[((si, j), (si, j + 1))] = \
+                        link_res.get(((si, j), (si, j + 1)), 0) + nbytes
+                for i in range(min(si, di), max(si, di)):
+                    link_res[((i, dj), (i + 1, dj))] = \
+                        link_res.get(((i, dj), (i + 1, dj)), 0) + nbytes
+                hops = abs(si - di) + abs(sj - dj)
+                max_hop_lat = max(max_hop_lat,
+                                  hops * hw.noc.hop_latency_cycles / hw.tile.clock_hz)
+                noc_bytes += nbytes
+            else:
+                raise TypeError(f"unknown comm op {type(op)}")
+
+        d_time = 0.0
+        if chan_bytes:
+            d_time = max(b / hw.hbm.channel_bw for b in chan_bytes.values())
+        if tile_bytes:
+            d_time = max(d_time, max(b / hw.tile.l1_bw for b in tile_bytes.values()))
+        n_time = 0.0
+        for res in (row_res, col_res):
+            if res:
+                n_time = max(n_time, max(b / hw.noc.link_bw for b in res.values()))
+        if link_res:
+            n_time = max(n_time, max(b / hw.noc.link_bw for b in link_res.values()))
+        if local_res:
+            n_time = max(n_time, max(b / hw.tile.l1_bw for b in local_res.values()))
+        n_time += max_hop_lat
+
+        # a multicast chained off a same-superstep owner DMA serializes the
+        # DMA and NoC phases (fetch -> fabric multicast dependency).
+        chained = any(isinstance(op, MulticastOp) and op.after_dma for op in step.comm)
+        comm_time = d_time + n_time if chained else max(d_time, n_time)
+        tot += max(c_time, comm_time) + barrier
+        comp_t += c_time
+        dma_t += d_time
+        noc_t += n_time
+
+    return PerfReport(total_time=tot, compute_time=comp_t, dma_time=dma_t,
+                      noc_time=noc_t,
+                      barrier_time=barrier * len(prog.supersteps),
+                      total_flops=flops, hbm_bytes=hbm_bytes,
+                      noc_bytes=noc_bytes, n_supersteps=len(prog.supersteps))
+
+
+def _matrix_shape(prog: Program, matrix: str) -> Tuple[int, int]:
+    m, n, k = prog.shape
+    return {"A": (m, k), "B": (k, n), "C": (m, n)}[matrix]

@@ -1,0 +1,15 @@
+"""Test-process invariants. NOTE: per the dry-run rules, XLA_FLAGS device
+forcing must never leak into the test process — smoke tests see 1 device;
+multi-device tests run in subprocesses (tests/test_gemm_modes.py)."""
+import os
+
+
+def test_env_guard():
+    pass
+
+
+def pytest_configure(config):
+    flags = os.environ.get("XLA_FLAGS", "")
+    assert "host_platform_device_count" not in flags, (
+        "XLA_FLAGS device forcing leaked into the test environment; "
+        "dry-runs must set it in their own subprocess only")

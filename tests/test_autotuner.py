@@ -1,0 +1,64 @@
+"""Autotuner: legality, insight-consistency, and the paper's headline
+behaviours at GH200 scale (these double as fast regression checks on the
+cost model)."""
+import pytest
+
+from repro.core.autotuner import enumerate_candidates, tune
+from repro.core.schedule import GEMMShape, Schedule, Tiling, build_program
+from repro.hw.config import (AcceleratorConfig, HBMConfig, NoCConfig,
+                             TileConfig, softhier_gh200)
+from repro.sim.perf import estimate
+
+MINI = AcceleratorConfig(name="mini", grid=(4, 4),
+                         tile=TileConfig(l1_bytes=4 * 1024 * 1024),
+                         noc=NoCConfig(), hbm=HBMConfig(n_channels=8))
+
+
+def test_candidates_are_legal():
+    shape = GEMMShape(256, 256, 256)
+    for sched in enumerate_candidates(shape, MINI, elem_bytes=4,
+                                      max_candidates=24):
+        prog = build_program(sched, MINI)       # raises if illegal
+        assert prog.supersteps
+
+
+def test_tune_beats_naive_baseline():
+    shape = GEMMShape(256, 256, 512)
+    res = tune(shape, MINI, elem_bytes=4, max_candidates=24)
+    naive = estimate(build_program(
+        Schedule(shape, Tiling(4, 4, 1, tk=64), "baseline"), MINI), MINI)
+    assert res.report.total_time < naive.total_time
+
+
+@pytest.mark.slow
+def test_paper_insight3_3d_beats_2d_on_irregular_shape():
+    hw = softhier_gh200()
+    shape = GEMMShape(4096, 2112, 7168)
+    two_d = estimate(build_program(
+        Schedule(shape, Tiling(32, 32, 1, tk=128), "summa", elem_bytes=1), hw), hw)
+    res = tune(shape, hw, elem_bytes=1, max_candidates=24)
+    assert res.report.total_time < two_d.total_time
+    assert res.schedule.tiling.gk > 1 or res.schedule.tiling.gn < 32
+
+
+@pytest.mark.slow
+def test_paper_insight4_remap_wins_flat_gemm():
+    hw = softhier_gh200()
+    shape = GEMMShape(64, 2112, 7168)
+    res = tune(shape, hw, elem_bytes=1, max_candidates=24)
+    two_d = estimate(build_program(
+        Schedule(shape, Tiling(32, 32, 1, tk=224), "summa", elem_bytes=1), hw), hw)
+    assert res.report.total_time < two_d.total_time / 2   # paper: large win
+    # the winner uses a flat logical grid (gm small) with 3-D split
+    assert res.schedule.tiling.gm <= 4 and res.schedule.tiling.gk >= 8
+
+
+@pytest.mark.slow
+def test_paper_fig12_portability():
+    """Autotuned utilization stays high across A100- and GH200-sized
+    instances (the paper's §4.2 claim)."""
+    from repro.hw.config import softhier_a100
+    shape = GEMMShape(4096, 4096, 7168)
+    for hw in (softhier_a100(), softhier_gh200()):
+        res = tune(shape, hw, elem_bytes=hw.tile.elem_bytes, max_candidates=16)
+        assert res.report.utilization(hw) > 0.5, hw.name

@@ -1,0 +1,68 @@
+"""HBM data layout (paper §3.2): split/placement schemes, preload packing."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.layout import (DataLayout, PlacementScheme, SplitScheme,
+                               base_layout, candidate_layouts, optimal_layout,
+                               pack_preload, unpack_preload)
+
+
+def test_split_scheme_block_shape():
+    s = SplitScheme(4, 4)
+    assert s.block_shape((64, 128)) == (16, 32)
+    with pytest.raises(ValueError):
+        s.block_shape((65, 128))
+
+
+def test_base_layout_single_channel():
+    lay = base_layout((64, 64), 16, 16, n_channels=8)
+    # every tile lands on channel 0: the paper's non-distributed base layout
+    for ti in range(4):
+        for tj in range(4):
+            assert lay.channel_of_tile(ti, tj, (64, 64)) == 0
+
+
+def test_optimal_layout_spreads_channels():
+    lay = optimal_layout((64, 64), 16, 16, n_channels=8)
+    chans = {lay.channel_of_tile(ti, tj, (64, 64))
+             for ti in range(4) for tj in range(4)}
+    assert len(chans) == 8  # 16 tile-blocks round-robin over 8 channels
+
+
+def test_channel_traffic_histogram():
+    lay = optimal_layout((64, 64), 16, 16, n_channels=4)
+    reads = [(ti, tj) for ti in range(4) for tj in range(4)]
+    traffic = lay.channel_traffic(reads, (64, 64), elem_bytes=4)
+    assert sum(traffic.values()) == 64 * 64 * 4
+    assert max(traffic.values()) == min(traffic.values())  # perfectly balanced
+
+
+@given(gm=st.sampled_from([1, 2, 4]), gn=st.sampled_from([1, 2, 4]),
+       tm=st.sampled_from([4, 8]), tn=st.sampled_from([4, 8]),
+       nch=st.sampled_from([1, 4, 8]))
+@settings(max_examples=40, deadline=None)
+def test_pack_unpack_roundtrip(gm, gn, tm, tn, nch):
+    m, n = gm * tm * 2, gn * tn * 2
+    lay = DataLayout(SplitScheme(gm, gn), PlacementScheme(tm, tn), nch)
+    mat = np.arange(m * n, dtype=np.float32).reshape(m, n)
+    images = pack_preload(mat, lay, elem_bytes=4)
+    out = unpack_preload(images, lay, (m, n), np.float32)
+    np.testing.assert_array_equal(mat, out)
+
+
+def test_tile_addresses_unique():
+    lay = DataLayout(SplitScheme(2, 2), PlacementScheme(8, 8), n_channels=4)
+    seen = set()
+    for ti in range(4):
+        for tj in range(4):
+            addr = lay.tile_address(ti, tj, (32, 32), 4)
+            assert addr not in seen
+            seen.add(addr)
+
+
+def test_candidate_layouts_include_base_and_optimal():
+    cands = candidate_layouts((64, 64), 16, 16, n_channels=8)
+    grids = {(c.split.grid_m, c.split.grid_n) for c in cands}
+    assert (1, 1) in grids and (4, 4) in grids

@@ -1,0 +1,96 @@
+"""Mask-based collective addressing: the paper's (i & M) == S group calculus
+and its equivalence with binary sub-axis decomposition (the TPU lowering)."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.masks import (MaskSpec, all_group, axis_bits, col_group,
+                              group_to_device_ids, mask_to_subaxes,
+                              partition_grid, rect_group, row_group, single,
+                              strided_group, subaxes_to_members)
+
+
+def brute_force_members(spec: MaskSpec, extent: int):
+    return [i for i in range(extent) if (i & spec.mask) == spec.selector]
+
+
+@given(mask=st.integers(0, 31), sel=st.integers(0, 31))
+def test_mask_spec_matches_formula(mask, sel):
+    sel &= mask  # keep the group non-empty
+    spec = MaskSpec(sel, mask)
+    members = brute_force_members(spec, 32)
+    assert members, "aligned selector must give a non-empty group"
+    # group size is always a power of two: 2^(free bits)
+    free = bin(~mask & 31).count("1")
+    assert len(members) == 1 << free
+
+
+@given(mask=st.integers(0, 63), sel=st.integers(0, 63))
+@settings(max_examples=200)
+def test_subaxis_decomposition_equivalence(mask, sel):
+    """The paper's mask groups == binary sub-axis groups (DESIGN.md §2.2)."""
+    sel &= mask
+    spec = MaskSpec(sel, mask)
+    free_bits, fixed = mask_to_subaxes(spec, 64)
+    assert subaxes_to_members(free_bits, fixed, 64) == brute_force_members(spec, 64)
+
+
+@pytest.mark.parametrize("grid", [(4, 4), (8, 8), (16, 16), (4, 16)])
+def test_row_col_groups(grid):
+    rows, cols = grid
+    for i in range(rows):
+        g = row_group(i, grid)
+        assert g.members(grid) == [(i, j) for j in range(cols)]
+    for j in range(cols):
+        g = col_group(j, grid)
+        assert g.members(grid) == [(i, j) for i in range(rows)]
+
+
+def test_rect_group():
+    grid = (8, 8)
+    g = rect_group(4, 2, 2, 2, grid)
+    assert g.members(grid) == [(4, 2), (4, 3), (5, 2), (5, 3)]
+    with pytest.raises(ValueError):
+        rect_group(3, 0, 2, 2, grid)       # unaligned origin
+    with pytest.raises(ValueError):
+        rect_group(0, 0, 3, 2, grid)       # non-power-of-2 size
+
+
+def test_strided_group():
+    grid = (8, 8)
+    g = strided_group(1, 2, 0, 4, grid)
+    expect = [(i, j) for i in range(8) for j in range(8) if i % 2 == 1 and j % 4 == 0]
+    assert sorted(g.members(grid)) == sorted(expect)
+
+
+def test_all_and_single():
+    grid = (4, 4)
+    assert len(all_group().members(grid)) == 16
+    assert single(2, 3, grid).members(grid) == [(2, 3)]
+
+
+def test_partition_grid_covers_disjointly():
+    grid = (8, 8)
+    groups = partition_grid(grid, (2, 4))
+    seen = set()
+    for g in groups:
+        for m in g.members(grid):
+            assert m not in seen
+            seen.add(m)
+    assert len(seen) == 64
+
+
+def test_device_ids_row_major():
+    grid = (4, 4)
+    assert group_to_device_ids(row_group(1, grid), grid) == [4, 5, 6, 7]
+
+
+def test_invalid_selector_rejected():
+    with pytest.raises(ValueError):
+        MaskSpec(selector=4, mask=3).validate()
+
+
+def test_axis_bits_requires_pow2():
+    assert axis_bits(16) == 4
+    with pytest.raises(ValueError):
+        axis_bits(12)

@@ -1,0 +1,75 @@
+"""Cluster index remap (paper §3.1.2): logical-grid collectives lower to
+single physical mask groups."""
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.core.remap import ClusterRemap, candidate_remaps, flat_mask_group
+
+POW2 = [1, 2, 4, 8, 16]
+
+
+@st.composite
+def remaps(draw):
+    pr = draw(st.sampled_from([2, 4, 8]))
+    pc = draw(st.sampled_from([2, 4, 8]))
+    n = pr * pc
+    lr = draw(st.sampled_from([d for d in POW2 + [32, 64] if d <= n and n % d == 0]))
+    return ClusterRemap((pr, pc), (lr, n // lr))
+
+
+@given(remaps())
+def test_roundtrip(rm):
+    for pi in range(rm.physical[0]):
+        for pj in range(rm.physical[1]):
+            lr, lc = rm.to_logical(pi, pj)
+            assert rm.to_physical(lr, lc) == (pi, pj)
+
+
+@given(remaps())
+def test_logical_row_group_is_one_mask_group(rm):
+    for lr in range(rm.logical[0]):
+        group = rm.logical_row_group(lr)
+        members = group.members(rm.physical)
+        expect = sorted(rm.to_physical(lr, lc) for lc in range(rm.logical[1]))
+        assert sorted(members) == expect
+
+
+@given(remaps())
+def test_logical_col_group_is_one_mask_group(rm):
+    for lc in range(rm.logical[1]):
+        group = rm.logical_col_group(lc)
+        expect = sorted(rm.to_physical(lr, lc) for lr in range(rm.logical[0]))
+        assert sorted(group.members(rm.physical)) == expect
+
+
+def test_logical_rect_group():
+    rm = ClusterRemap((4, 4), (2, 8))
+    g = rm.logical_rect_group(0, 4, 2, 4)
+    expect = sorted(rm.to_physical(lr, lc) for lr in range(2) for lc in range(4, 8))
+    assert sorted(g.members(rm.physical)) == expect
+
+
+def test_paper_insight4_remap():
+    """32x32 physical -> 1x1024 logical (the flat-GEMM remap of §4.1.3)."""
+    rm = ClusterRemap((32, 32), (1, 1024))
+    g = rm.logical_row_group(0)
+    assert len(g.members(rm.physical)) == 1024
+
+
+def test_mismatched_sizes_rejected():
+    with pytest.raises(ValueError):
+        ClusterRemap((4, 4), (2, 4))
+    with pytest.raises(ValueError):
+        ClusterRemap((4, 3), (2, 6))
+
+
+def test_candidate_remaps_enumeration():
+    cands = candidate_remaps((4, 4))
+    assert [c.logical for c in cands] == [(1, 16), (2, 8), (4, 4), (8, 2), (16, 1)]
+
+
+def test_flat_mask_group():
+    # flat index L on a 4x4 grid; group {L : L % 4 == 1} = column 1
+    g = flat_mask_group(1, 3, (4, 4))
+    assert sorted(g.members((4, 4))) == [(i, 1) for i in range(4)]

@@ -1,0 +1,126 @@
+"""End-to-end system tests: every smoke arch trains (loss decreases, no
+NaNs), decodes, checkpoints and recovers from injected failures."""
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import list_archs, smoke_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.ft.runtime import FailureInjector, LoopConfig, run_training
+from repro.models.model import decode_init, decode_step, forward, init_params
+from repro.optim import adamw, compress
+from repro.train.steps import make_serve_step, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch_for(cfg, b, s, rng):
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+    }
+    if cfg.frontend == "vision_stub":
+        batch["prefix_embeds"] = jnp.ones((b, cfg.n_prefix, cfg.d_model),
+                                          jnp.bfloat16) * 0.01
+    if cfg.is_encoder_decoder:
+        batch["encoder_embeds"] = jnp.ones((b, cfg.n_prefix, cfg.d_model),
+                                           jnp.bfloat16) * 0.01
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_shapes_and_finite(arch):
+    cfg = smoke_config(arch)
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(0)
+    batch = _batch_for(cfg, 2, 32, rng)
+    kwargs = {}
+    if "prefix_embeds" in batch:
+        kwargs["prefix_embeds"] = batch["prefix_embeds"]
+    if "encoder_embeds" in batch:
+        kwargs["encoder_embeds"] = batch["encoder_embeds"]
+    logits = forward(params, batch["tokens"], cfg, remat=False, **kwargs)
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.vocab
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_train_step_runs(arch):
+    cfg = smoke_config(arch)
+    params = init_params(KEY, cfg)
+    opt = adamw.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    ostate = adamw.init(params)
+    step = jax.jit(make_train_step(cfg, opt))
+    rng = np.random.default_rng(1)
+    batch = _batch_for(cfg, 2, 32, rng)
+    params2, ostate2, _, metrics = step(params, ostate, None, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually changed
+    delta = jax.tree.map(lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                                    - b.astype(jnp.float32)).max()),
+                         params, params2)
+    assert max(jax.tree.leaves(delta)) > 0
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "deepseek-moe-16b", "zamba2-1.2b",
+                                  "xlstm-1.3b", "seamless-m4t-medium"])
+def test_decode_steps(arch):
+    cfg = smoke_config(arch)
+    params = init_params(KEY, cfg)
+    serve = jax.jit(make_serve_step(cfg))
+    caches = decode_init(params, cfg, 2, 16)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    kwargs = {}
+    if cfg.is_encoder_decoder:
+        enc = jnp.ones((2, cfg.n_prefix, cfg.d_model), cfg.dtype) * 0.01
+        kwargs = {"encoder_out": enc @ params["frontend_proj"]}
+    for i in range(3):
+        logits, caches = serve(params, caches, tok, jnp.asarray(i), **kwargs)
+        tok = jnp.argmax(logits, -1)[:, None] % cfg.vocab
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_loss_decreases_with_failure_recovery(tmp_path):
+    cfg = smoke_config("olmo-1b")
+    opt = adamw.AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=40)
+    params = init_params(KEY, cfg)
+    state0 = (params, adamw.init(params), compress.init(params))
+    raw = jax.jit(make_train_step(cfg, opt, microbatches=2, compress_grads=True))
+
+    def step_fn(state, batch):
+        p, o, c = state
+        p, o, c, m = raw(p, o, c, batch)
+        return (p, o, c), m
+
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8))
+    losses = []
+    run_training(
+        step_fn, state0, data,
+        LoopConfig(total_steps=40, ckpt_every=10, ckpt_dir=str(tmp_path)),
+        make_batch_arrays=lambda b: {k: jnp.asarray(v) for k, v in b.items()},
+        injector=FailureInjector(fail_at={15}),
+        on_metrics=lambda s, m: losses.append((s, float(m["loss"]))))
+    first = np.mean([l for s, l in losses if s < 5])
+    last = np.mean([l for s, l in losses if s >= 35])
+    assert last < first - 0.2, f"no learning: {first} -> {last}"
+    # failure at 15 was recovered: steps continued past it
+    assert max(s for s, _ in losses) == 39
+
+
+def test_decode_matches_forward_logits():
+    """Prefill-then-decode must agree with teacher-forced forward."""
+    cfg = smoke_config("olmo-1b")
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(3)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, 8)), jnp.int32)
+    full_logits = forward(params, tokens, cfg, remat=False)
+    caches = decode_init(params, cfg, 2, 16)
+    for i in range(tokens.shape[1]):
+        logits, caches = decode_step(params, caches, tokens[:, i:i + 1],
+                                     jnp.asarray(i), cfg)
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(full_logits[:, -1]),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,62 @@
+"""Cold vs warm deployment planning (the deploy/ subsystem's headline).
+
+Cold path: full candidate search per shape (what the paper's toolchain does
+once per deployment). Warm path: PlanCache hit — no enumeration, no pricing.
+Bucketed path: an untuned shape served by adapting the nearest tuned bucket,
+reported as estimated-time ratio vs a fresh tune (tolerance target: 1.25).
+
+Rows:
+  plan.cold_tune,<us per shape>,shapes=N
+  plan.warm_hit,<us per shape>,speedup=<cold/warm>x
+  plan.bucketed.<MxNxK>,<us lookup>,ratio=<est/fresh>
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import DEEPSEEK_NK
+from repro.core.schedule import GEMMShape
+from repro.deploy import PlanCache, Planner
+from repro.hw.config import softhier_gh200
+
+# three compute-bound DeepSeek projection shapes (M = 4096 tokens)
+TUNE_SHAPES = [GEMMShape(4096, n, k) for (n, k) in DEEPSEEK_NK[:3]]
+# untuned probes: same workload family, one dimension perturbed — the kind
+# of near-miss serving traffic the bucketing layer exists for.
+PROBE_SHAPES = [GEMMShape(4096, 2112, 3584),
+                GEMMShape(4096, 1056, 7168),
+                GEMMShape(4096, 24576, 3072)]
+
+
+def run() -> List[str]:
+    hw = softhier_gh200()
+    planner = Planner(hw, cache=PlanCache(), elem_bytes=1, max_candidates=8)
+
+    t0 = time.perf_counter()
+    planner.batch_tune(TUNE_SHAPES)
+    cold_us = (time.perf_counter() - t0) / len(TUNE_SHAPES) * 1e6
+
+    t0 = time.perf_counter()
+    for shape in TUNE_SHAPES:
+        planner.plan(shape)
+    warm_us = (time.perf_counter() - t0) / len(TUNE_SHAPES) * 1e6
+
+    rows = [
+        f"plan.cold_tune,{cold_us:.1f},shapes={len(TUNE_SHAPES)}",
+        f"plan.warm_hit,{warm_us:.1f},speedup={cold_us / warm_us:.0f}x",
+    ]
+    for shape in PROBE_SHAPES:
+        t0 = time.perf_counter()
+        plan = planner.plan(shape)
+        lookup_us = (time.perf_counter() - t0) * 1e6
+        fresh = planner._tune_shape(shape)
+        ratio = plan.report.total_time / fresh.report.total_time
+        rows.append(f"plan.bucketed.{shape.m}x{shape.n}x{shape.k},"
+                    f"{lookup_us:.1f},source={plan.source} ratio={ratio:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -54,6 +54,9 @@ def enumerate_candidates(shape: GEMMShape, hw: AcceleratorConfig,
     dataflows = dataflows or ["summa", "splitk_summa", "systolic", "baseline"]
 
     cands: List[Tuple[float, Schedule]] = []
+    # the tk >= k_local clamp makes distinct tk values collapse onto the same
+    # effective tiling; dedupe so max_candidates isn't spent on repeats.
+    seen: set = set()
     # logical grids: gm * gn * gk == n_tiles, all powers of two.
     for gk in _pow2_range(1, n_tiles):
         rest = n_tiles // gk
@@ -107,6 +110,11 @@ def enumerate_candidates(shape: GEMMShape, hw: AcceleratorConfig,
                             score = -(_engine_friendly(tn, hw) * eff_m * ceil_k)
                             score *= {"summa": 1.0, "splitk_summa": 0.98,
                                       "systolic": 0.9, "baseline": 0.1}[df]
+                            key = (gm, gn, gk, iter_m, iter_n, tk_eff, df,
+                                   acc_bytes)
+                            if key in seen:
+                                continue
+                            seen.add(key)
                             cands.append((score, Schedule(
                                 shape=shape,
                                 tiling=Tiling(gm, gn, gk, iter_m, iter_n, tk_eff),
@@ -143,3 +151,39 @@ def tune(shape: GEMMShape, hw: AcceleratorConfig,
         raise RuntimeError(f"no legal schedule found for {shape} on {hw.name}")
     return TunedResult(schedule=best[1], report=best[2],
                        candidates_tried=tried, log=log)
+
+
+def tune_cached(shape: GEMMShape, hw: AcceleratorConfig,
+                cache, **tune_kwargs) -> TunedResult:
+    """Cache-aware `tune`: consult a `repro.deploy.PlanCache` first.
+
+    A hit returns immediately with candidates_tried == 0 (no enumeration, no
+    pricing); a miss runs the normal search and persists the winner. This is
+    the minimal entry point for callers that don't want a full
+    `repro.deploy.Planner` (which adds shape bucketing and refinement).
+
+    A `dataflows` restriction keys its plans under a separate cache variant,
+    so constrained searches never collide with (or clobber) the unrestricted
+    winners. Other knobs (max_candidates, store_stage_options) affect search
+    effort, not validity, so a hit tuned under different effort is served.
+    """
+    from repro.deploy.plan import (plan_from_tuning,   # deploy imports us
+                                   search_variant)
+
+    elem_bytes = tune_kwargs.get("elem_bytes", 1)
+    # [] means 'unrestricted' to enumerate_candidates; keep the cache
+    # variant and the admissibility check consistent with that.
+    dataflows = tune_kwargs.get("dataflows") or None
+    variant = search_variant(dataflows)
+    plan = cache.get(shape, elem_bytes, hw, variant)
+    if plan is not None and dataflows is not None \
+            and plan.schedule.dataflow not in dataflows:
+        plan = None                                   # defensive (shared dir)
+    if plan is not None:
+        return TunedResult(schedule=plan.schedule, report=plan.report,
+                           candidates_tried=0, log=[])
+    res = tune(shape, hw, **tune_kwargs)
+    cache.put(plan_from_tuning(shape, hw, res.schedule, res.report,
+                               candidates_tried=res.candidates_tried,
+                               variant=variant))
+    return res

@@ -197,10 +197,76 @@ def auto_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
     return out.astype(a.dtype)
 
 
+def mode_from_schedule(schedule, mesh: Mesh, row_axis: str = "data",
+                       col_axis: str = "model") -> Tuple[str, dict]:
+    """Map a tuned `Schedule`'s dataflow onto a mesh dispatch (mode, kwargs).
+
+    The SoftHier dataflow names translate to their shard_map analogues:
+    splitk_summa -> splitk (scatter iff the schedule's reduction owner is
+    round-robined), systolic -> cannon (square meshes only; rectangular
+    meshes fall back to summa, the paper's default), baseline -> allgather,
+    everything summa-shaped -> summa. `schedule` is duck-typed (dataflow +
+    reduce_owner), so both core Schedules and deserialized plans work.
+    """
+    df = getattr(schedule, "dataflow", "summa")
+    kw: dict = {}
+    if df == "splitk_summa":
+        kw["k_axis"] = col_axis
+        kw["scatter"] = getattr(schedule, "reduce_owner", "") == "round_robin"
+        return "splitk", kw
+    if df == "systolic":
+        if _axis_size(mesh, row_axis) == _axis_size(mesh, col_axis):
+            return "cannon", kw
+        return "summa", kw
+    if df == "baseline":
+        return "allgather", kw
+    return "summa", kw
+
+
+def _mode_divisible(mode: str, m: int, n: int, k: int, mesh: Mesh,
+                    row_axis: str, col_axis: str, k_axis: str) -> bool:
+    """Whether `mode`'s shard_map specs legally tile (m, n, k) on `mesh`."""
+    dm, dn = _axis_size(mesh, row_axis), _axis_size(mesh, col_axis)
+    if mode == "summa":
+        return m % dm == 0 and n % dn == 0 and k % (dm * dn) == 0
+    if mode in ("cannon", "allgather"):
+        return m % dm == 0 and n % dn == 0 and k % dm == 0 and k % dn == 0
+    if mode == "splitk":
+        return k % _axis_size(mesh, k_axis) == 0
+    return True                                     # auto shards anything
+
+
 def dit_gemm(a: jax.Array, b: jax.Array, mesh: Mesh, mode: str = "auto",
              row_axis: str = "data", col_axis: str = "model",
-             **kw) -> jax.Array:
-    """Dispatch on the deployment schedule's dataflow pattern."""
+             plan=None, planner=None, **kw) -> jax.Array:
+    """Dispatch on the deployment schedule's dataflow pattern.
+
+    `plan` (a `repro.deploy.DeploymentPlan` or a bare `Schedule`) or
+    `planner` (a `repro.deploy.Planner`, consulted — and warmed — per shape)
+    overrides `mode`: the tuned dataflow decides the collective pattern
+    instead of the hardcoded default.
+    """
+    if planner is not None and plan is None:
+        from repro.core.schedule import GEMMShape
+        plan = planner.plan(GEMMShape(a.shape[0], b.shape[1], a.shape[1]))
+    if plan is not None:
+        sched = getattr(plan, "schedule", plan)
+        mode, plan_kw = mode_from_schedule(sched, mesh, row_axis, col_axis)
+        kw = {**plan_kw, **kw}      # merge BEFORE validating: the legality
+        # checks below must see the same values dispatch will use, caller
+        # overrides included.
+        if mode == "splitk" and kw.get("scatter"):
+            # psum_scatter needs M divisible by the k-group; degrade to the
+            # replicated-C reduction ('first'-owner policy) when it isn't.
+            if a.shape[0] % _axis_size(mesh, kw["k_axis"]):
+                kw["scatter"] = False
+        if not _mode_divisible(mode, a.shape[0], b.shape[1], a.shape[1],
+                               mesh, row_axis, col_axis,
+                               kw.get("k_axis", col_axis)):
+            # the tuned grid doesn't legally shard these arrays on this
+            # mesh (e.g. a SoftHier plan transferred to a mismatched pod
+            # view) — let XLA place the collectives rather than crash.
+            mode, kw = "auto", {}
     if mode == "auto":
         return auto_gemm(a, b, mesh, row_axis, col_axis)
     if mode == "summa":

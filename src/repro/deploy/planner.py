@@ -1,0 +1,268 @@
+"""Planner: the deployment front-end over the autotuner.
+
+One `Planner` owns (hardware, cache, search knobs) and answers every "how do
+I run this GEMM" question a serving stack asks:
+
+- `plan(shape)` — the dispatch path. Exact cache hit returns instantly (no
+  candidate enumeration); a miss first tries a bucketed transfer from a
+  nearby tuned shape (one build + one estimate instead of a full search, and
+  the exact shape is queued for background refinement); only a cold shape
+  with no usable neighbour pays a full `tune`.
+- `batch_tune(shapes)` — warm the cache for a whole workload in one pass,
+  deduping shapes first.
+- `refine_pending()` / `refine_async(executor)` — the background-refinement
+  hook: re-tune bucket-served shapes for real and upgrade their cache
+  entries when the fresh schedule is faster.
+
+`model_workload` extracts the deduplicated GEMM shapes of one model
+config's forward pass (projections, FFN, MoE experts, LM head) so a server
+can warm its planner from the architectures it will host.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.autotuner import tune
+from repro.core.schedule import GEMMShape, build_program
+from repro.hw.config import AcceleratorConfig
+from repro.sim.perf import estimate
+
+from repro.deploy.bucketing import BucketingPolicy, transfer_candidates, adapt
+from repro.deploy.cache import PlanCache
+from repro.deploy.plan import (DeploymentPlan, SOURCE_BUCKETED, SOURCE_TUNED,
+                               hw_fingerprint, plan_from_tuning,
+                               search_variant)
+
+
+class Planner:
+    def __init__(self, hw: AcceleratorConfig,
+                 cache: Optional[PlanCache] = None,
+                 elem_bytes: Optional[int] = None,
+                 max_candidates: int = 48,
+                 dataflows: Optional[List[str]] = None,
+                 store_stage_options: Tuple[int, ...] = (1, 4),
+                 policy: BucketingPolicy = BucketingPolicy(),
+                 on_plan: Optional[Callable[[DeploymentPlan], None]] = None):
+        self.hw = hw
+        self.cache = cache if cache is not None else PlanCache()
+        self.elem_bytes = (elem_bytes if elem_bytes is not None
+                           else hw.tile.elem_bytes)
+        self.max_candidates = max_candidates
+        # [] would mean 'unrestricted' to the tuner but 'nothing admissible'
+        # to the cache check — normalize it to None so both agree.
+        self.dataflows = list(dataflows) if dataflows else None
+        self.store_stage_options = store_stage_options
+        self.policy = policy
+        self.on_plan = on_plan
+        # restricted searches live under their own cache-key variant so they
+        # never collide with (or clobber) the unrestricted winners.
+        self.variant = search_variant(dataflows)
+        self._pending: List[GEMMShape] = []
+
+    # -- dispatch path ------------------------------------------------------
+
+    def plan(self, shape: GEMMShape,
+             allow_bucketed: bool = True) -> DeploymentPlan:
+        cached = self.cache.get(shape, self.elem_bytes, self.hw,
+                                self.variant)
+        if cached is not None and self._admissible(cached.schedule):
+            return cached
+        if allow_bucketed:
+            bucketed = self._bucketed_plan(shape)
+            if bucketed is not None:
+                return bucketed
+        return self._tune_and_cache(shape)
+
+    def _admissible(self, schedule) -> bool:
+        """Defensive check on top of the variant keying: a plan outside this
+        planner's dataflow space (e.g. from a hand-edited cache dir) is a
+        miss, not a silently wrong hit."""
+        return self.dataflows is None or schedule.dataflow in self.dataflows
+
+    def _bucketed_plan(self, shape: GEMMShape) -> Optional[DeploymentPlan]:
+        pool = list(self.cache.shapes_for(self.elem_bytes, self.hw,
+                                          self.variant))
+        best = None     # (time, schedule, report)
+        priced = 0
+        for src_shape in transfer_candidates(shape, pool, self.policy):
+            if priced >= self.policy.max_transfers:
+                break
+            src = self.cache.peek(src_shape, self.elem_bytes, self.hw,
+                                  self.variant)
+            if src is None or not self._admissible(src.schedule):
+                continue
+            if src.source != SOURCE_TUNED:
+                # never chain transfers off an already-bucketed plan: each
+                # hop can lose up to `tolerance`, and the expected-time
+                # guard scales the *source's* time, so generations would
+                # compound the loss unboundedly. Only full tunes seed
+                # transfers, bounding the error to one generation.
+                continue
+            adapted = adapt(src.schedule, shape, self.hw)
+            if adapted is None:
+                continue
+            try:
+                report = estimate(build_program(adapted, self.hw), self.hw)
+            except (ValueError, KeyError):
+                continue
+            priced += 1
+            # what this shape *should* cost if the transfer preserved the
+            # source's efficiency: the source's time scaled by the work
+            # ratio (compute- and memory-bound lower bounds).
+            scale = max(shape.flops() / src_shape.flops(),
+                        shape.min_bytes(self.elem_bytes)
+                        / src_shape.min_bytes(self.elem_bytes))
+            expected = src.report.total_time * scale
+            if report.total_time > (1.0 + self.policy.tolerance) * expected:
+                # this transfer lost too much efficiency (e.g. the tuned
+                # grid's tiles no longer fill the engine) — but another
+                # source may still pass its own bound, so keep looking.
+                continue
+            if best is None or report.total_time < best[0]:
+                best = (report.total_time, adapted, report)
+        if best is None:
+            return None
+        plan = plan_from_tuning(shape, self.hw, best[1], best[2],
+                                source=SOURCE_BUCKETED,
+                                variant=self.variant)
+        self.cache.put(plan)
+        self._pending.append(shape)
+        self._emit(plan)
+        return plan
+
+    def _tune_and_cache(self, shape: GEMMShape) -> DeploymentPlan:
+        plan = self._tune_shape(shape)
+        self.cache.put(plan)
+        self._emit(plan)
+        return plan
+
+    def _emit(self, plan: DeploymentPlan) -> None:
+        if self.on_plan is not None:
+            self.on_plan(plan)
+
+    # -- batch warming ------------------------------------------------------
+
+    def batch_tune(self, shapes: Sequence[GEMMShape],
+                   allow_bucketed: bool = False
+                   ) -> Dict[GEMMShape, DeploymentPlan]:
+        """Tune a whole workload's (deduplicated) shapes into the cache."""
+        out: Dict[GEMMShape, DeploymentPlan] = {}
+        for shape in dict.fromkeys(shapes):
+            out[shape] = self.plan(shape, allow_bucketed=allow_bucketed)
+        return out
+
+    # -- background refinement ---------------------------------------------
+
+    @property
+    def pending_refinements(self) -> Tuple[GEMMShape, ...]:
+        return tuple(self._pending)
+
+    def refine_pending(self, limit: Optional[int] = None
+                       ) -> List[Tuple[GEMMShape, float, float]]:
+        """Full-tune bucket-served shapes; upgrade entries that improve.
+
+        Returns (shape, bucketed_estimate, tuned_estimate) per refinement —
+        the validation record of the bucketing shortcut.
+        """
+        n = len(self._pending) if limit is None else min(limit,
+                                                         len(self._pending))
+        todo, self._pending = self._pending[:n], self._pending[n:]
+        out = []
+        for shape in todo:
+            out.append(self._refine_one(shape))
+        return out
+
+    def refine_async(self, executor) -> List["object"]:
+        """Submit pending refinements to a concurrent.futures executor."""
+        todo, self._pending = self._pending, []
+        return [executor.submit(self._refine_one, shape) for shape in todo]
+
+    def _refine_one(self, shape: GEMMShape
+                    ) -> Tuple[GEMMShape, float, float]:
+        current = self.cache.peek(shape, self.elem_bytes, self.hw,
+                                  self.variant)
+        fresh = self._tune_shape(shape)
+        old_t = current.report.total_time if current else float("inf")
+        # <= so a tie still records the validation: the entry becomes
+        # SOURCE_TUNED and can seed future transfers.
+        if fresh.report.total_time <= old_t:
+            self.cache.put(fresh)
+            self._emit(fresh)
+        return (shape, old_t, fresh.report.total_time)
+
+    def _tune_shape(self, shape: GEMMShape) -> DeploymentPlan:
+        res = tune(shape, self.hw, dataflows=self.dataflows,
+                   elem_bytes=self.elem_bytes,
+                   max_candidates=self.max_candidates,
+                   store_stage_options=self.store_stage_options)
+        return plan_from_tuning(shape, self.hw, res.schedule, res.report,
+                                candidates_tried=res.candidates_tried,
+                                source=SOURCE_TUNED, variant=self.variant)
+
+    # -- validation ---------------------------------------------------------
+
+    def transfer_ratio(self, shape: GEMMShape) -> float:
+        """estimated(bucketed plan) / estimated(fresh tune) for `shape`.
+
+        Used by tests and the cold/warm benchmark to check the bucketing
+        tolerance; runs a full tune, so it is NOT a dispatch-path call.
+        """
+        plan = self.plan(shape)
+        fresh = self._tune_shape(shape)
+        return plan.report.total_time / fresh.report.total_time
+
+
+# ---------------------------------------------------------------------------
+# Workload extraction
+# ---------------------------------------------------------------------------
+
+def model_workload(cfg, batch: int, seq: int,
+                   kind: str = "prefill") -> List[GEMMShape]:
+    """Deduplicated projection GEMMs of one forward pass of `cfg`.
+
+    `cfg` is a `repro.models.common.ModelConfig` (duck-typed so the deploy
+    layer stays importable without jax). Token dimension M is batch*seq for
+    train/prefill and batch for decode; weights supply (K, N).
+    """
+    tokens = batch * seq if kind in ("train", "prefill") else batch
+    tokens = max(1, tokens)
+    d, hd = cfg.d_model, cfg.hd
+    shapes: List[GEMMShape] = []
+
+    def gemm(m, n, k):
+        if m > 0 and n > 0 and k > 0:
+            shapes.append(GEMMShape(m, n, k))
+
+    # attention projections
+    if getattr(cfg, "attn", "gqa") == "mla":
+        if cfg.q_lora_rank:
+            gemm(tokens, cfg.q_lora_rank, d)
+        qdim = cfg.n_heads * (cfg.nope_head_dim + cfg.rope_head_dim)
+        gemm(tokens, qdim, cfg.q_lora_rank or d)
+        gemm(tokens, cfg.kv_lora_rank + cfg.rope_head_dim, d)
+        gemm(tokens, cfg.n_heads * cfg.nope_head_dim, cfg.kv_lora_rank)
+        gemm(tokens, d, cfg.n_heads * cfg.nope_head_dim)
+    else:
+        gemm(tokens, cfg.n_heads * hd, d)               # Q
+        gemm(tokens, cfg.n_kv_heads * hd, d)            # K and V (identical)
+        gemm(tokens, d, cfg.n_heads * hd)               # O
+    # FFN (dense layers) and MoE experts
+    if cfg.d_ff:
+        gemm(tokens, cfg.d_ff, d)                       # gate / up (identical)
+        gemm(tokens, d, cfg.d_ff)                       # down
+    if cfg.n_experts and cfg.moe_top_k:
+        per_expert = max(1, tokens * cfg.moe_top_k // cfg.n_experts)
+        gemm(per_expert, cfg.moe_d_ff, d)
+        gemm(per_expert, d, cfg.moe_d_ff)
+    # LM head
+    gemm(tokens, cfg.vocab, d)
+    return list(dict.fromkeys(shapes))
+
+
+def arch_workload(cfg, shape_name: str) -> List[GEMMShape]:
+    """`model_workload` with (batch, seq, kind) pulled from the registry's
+    shape suite (the same cells the dry-run sweep enumerates)."""
+    from repro.configs.registry import SHAPES
+    spec = SHAPES[shape_name]
+    return model_workload(cfg, batch=spec["global_batch"],
+                          seq=spec["seq_len"], kind=spec["kind"])

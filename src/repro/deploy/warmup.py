@@ -1,0 +1,49 @@
+"""Shared launcher warm-up: one place for the plan-cache CLI flags and the
+planner construction both `launch.serve` and `launch.sweep` use, so the two
+entry points cannot drift apart.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Sequence
+
+from repro.core.schedule import GEMMShape
+
+from repro.deploy.bucketing import bucket_of
+from repro.deploy.cache import PlanCache
+from repro.deploy.planner import Planner
+
+
+def add_plan_args(ap) -> None:
+    """The launcher flags controlling plan-cache warm-up."""
+    ap.add_argument("--plan-cache", default="results/plan_cache",
+                    help="directory for persisted deployment plans")
+    ap.add_argument("--plan-grid", type=int, nargs=2, default=(4, 4),
+                    metavar=("R", "C"),
+                    help="pod grid the plans are tuned for")
+    ap.add_argument("--plan-candidates", type=int, default=12,
+                    help="autotuner search width during warm-up")
+    ap.add_argument("--skip-plan-warmup", action="store_true")
+
+
+def build_planner(cache_dir: str, grid, max_candidates: int) -> Planner:
+    """A Planner on the pod-view accelerator with a persistent cache."""
+    from repro.hw.config import tpu_pod_as_accelerator
+    return Planner(tpu_pod_as_accelerator(tuple(grid)),
+                   cache=PlanCache(cache_dir),
+                   max_candidates=max_candidates)
+
+
+def warm_buckets(planner: Planner,
+                 workload: Sequence[GEMMShape]) -> List[GEMMShape]:
+    """Batch-tune the deduplicated pow-2 buckets of a GEMM workload and
+    print the one-line warm-up summary. Returns the bucket list."""
+    t0 = time.time()
+    buckets = list(dict.fromkeys(bucket_of(s, planner.policy)
+                                 for s in workload))
+    planner.batch_tune(buckets)
+    print(f"plan cache: {len(dict.fromkeys(workload))} workload shapes -> "
+          f"{len(buckets)} buckets warmed in {time.time()-t0:.2f}s on "
+          f"{planner.hw.name} ({planner.cache.stats.describe()})",
+          flush=True)
+    return buckets

@@ -1,5 +1,10 @@
 """Serving launcher: batched prefill + decode loop against preallocated
-KV caches.
+KV caches. At startup the deployment-plan cache is warmed for the model's
+GEMM workload (bucketed shapes) and the decode-path schedules are reported;
+repeated launches resolve plans from the persisted store instead of
+re-tuning. The model stack's matmuls do not yet dispatch through
+`dit_gemm(plan=...)` — that wiring is a ROADMAP item; today the warmed
+cache is a startup artifact plus the schedule report below.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
       --batch 4 --prompt-len 32 --gen 32
@@ -14,8 +19,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_config
+from repro.deploy import Planner, model_workload
+from repro.deploy.warmup import add_plan_args, build_planner, warm_buckets
 from repro.models.model import decode_init, decode_step, forward, init_params
 from repro.train.steps import make_serve_step
+
+
+def warm_plan_cache(cfg, batch: int, prompt_len: int, max_len: int,
+                    cache_dir: str, grid, max_candidates: int) -> Planner:
+    """Batch-tune the model's (bucketed) GEMM workload into the plan cache."""
+    planner = build_planner(cache_dir, grid, max_candidates)
+    decode = model_workload(cfg, batch, max_len, kind="decode")
+    workload = model_workload(cfg, batch, prompt_len, kind="prefill") + decode
+    warm_buckets(planner, workload)
+    plans = {shape: planner.plan(shape)          # exact shapes: warm hits or
+             for shape in dict.fromkeys(workload)}   # cheap transfers
+    # the decode path dominates serving; report its planned schedules
+    for shape in list(dict.fromkeys(decode))[:4]:
+        plan = plans[shape]
+        print(f"  decode {shape.m}x{shape.n}x{shape.k}: "
+              f"{plan.schedule.describe()} "
+              f"est={plan.report.total_time*1e6:.2f}us [{plan.source}]")
+    return planner
 
 
 def main():
@@ -26,6 +51,7 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    add_plan_args(ap)
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -34,6 +60,9 @@ def main():
     key = jax.random.PRNGKey(1)
 
     max_len = args.prompt_len + args.gen
+    if not args.skip_plan_warmup:
+        warm_plan_cache(cfg, args.batch, args.prompt_len, max_len,
+                        args.plan_cache, args.plan_grid, args.plan_candidates)
     caches = decode_init(params, cfg, args.batch, max_len)
     serve = jax.jit(make_serve_step(cfg))
 

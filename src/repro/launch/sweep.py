@@ -1,7 +1,11 @@
 """Dry-run sweep driver: every (arch x shape) cell on the single-pod mesh
 (with roofline accounting) AND the 2-pod mesh (compile proof only). Each cell
 runs in a fresh subprocess (crash isolation, clean XLA state); completed cells
-are skipped on re-run (JSON cache).
+are skipped on re-run (JSON cache). Before launching cells, the deployment-
+plan cache is warmed across the union of every arch's GEMM workload (shapes
+deduped across archs — the whole point of a shared plan store); the
+persisted plans under --plan-cache are a sweep artifact alongside the
+dry-run JSONs, reusable by any later Planner on the same hw fingerprint.
 
   PYTHONPATH=src python -m repro.launch.sweep --out results/dryrun
 """
@@ -14,7 +18,20 @@ import subprocess
 import sys
 import time
 
-from repro.configs import cells, list_archs
+from repro.configs import cells, get_config, list_archs
+
+
+def warm_plans(archs, cache_dir: str, grid, max_candidates: int) -> None:
+    """Batch-tune the bucketed union of all archs' GEMM shapes."""
+    from repro.deploy import arch_workload
+    from repro.deploy.warmup import build_planner, warm_buckets
+
+    workload = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in cells(arch):
+            workload += arch_workload(cfg, shape_name)
+    warm_buckets(build_planner(cache_dir, grid, max_candidates), workload)
 
 
 def cell_done(out: str, arch: str, shape: str, mp: bool) -> bool:
@@ -66,10 +83,15 @@ def main():
     ap.add_argument("--timeout", type=int, default=3000)
     ap.add_argument("--only-arch", default=None)
     ap.add_argument("--skip-multipod", action="store_true")
+    from repro.deploy.warmup import add_plan_args
+    add_plan_args(ap)
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
 
     archs = [args.only_arch] if args.only_arch else list_archs()
+    if not args.skip_plan_warmup:
+        warm_plans(archs, args.plan_cache, args.plan_grid,
+                   args.plan_candidates)
     todo = []
     for arch in archs:
         for shape in cells(arch):

@@ -69,6 +69,14 @@ class PerfReport:
     def bw_utilization(self, hw: AcceleratorConfig) -> float:
         return (self.hbm_bytes / self.total_time) / hw.hbm.total_bw if self.total_time else 0.0
 
+    def to_dict(self) -> Dict[str, float]:
+        """Flat JSON-able form (stable field set — part of the plan schema)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, float]) -> "PerfReport":
+        return cls(**d)
+
     def summary(self, hw: AcceleratorConfig) -> str:
         return (f"time={self.total_time*1e6:.1f}us "
                 f"TFLOPS={self.achieved_flops/1e12:.1f} "

@@ -3,6 +3,9 @@ numpy GEMM oracle — the paper's 'numerical verification' workflow stage —
 plus structural properties of the generated BSP programs."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(requirements-dev.txt)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -50,12 +50,53 @@ BODY = textwrap.dedent("""
 """)
 
 
-@pytest.mark.slow
-def test_gemm_modes_multidevice():
+PLAN_BODY = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.gemm import dit_gemm
+    from repro.core.schedule import GEMMShape, Schedule, Tiling
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    rng = np.random.default_rng(0)
+    M, K, N = 64, 128, 64
+    a = jnp.asarray(rng.standard_normal((M, K)), dtype=jnp.float32)
+    b = jnp.asarray(rng.standard_normal((K, N)), dtype=jnp.float32)
+    ref = np.asarray(a @ b)
+
+    # a tuned schedule's dataflow decides the collective pattern
+    for df, owner in (("summa", "first"), ("systolic", "first"),
+                      ("splitk_summa", "round_robin"),
+                      ("splitk_summa", "first"), ("baseline", "first")):
+        gk = 4 if df == "splitk_summa" else 1
+        sched = Schedule(GEMMShape(M, N, K), Tiling(2, 2, gk, tk=32), df,
+                         reduce_owner=owner)
+        out = np.asarray(jax.jit(
+            lambda x, y, s=sched: dit_gemm(x, y, mesh, plan=s))(a, b))
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+        print("OK plan", df, owner)
+    print("ALL_OK")
+""")
+
+
+def _run_subprocess(body):
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     env.pop("XLA_FLAGS", None)
-    proc = subprocess.run([sys.executable, "-c", BODY], env=env,
+    proc = subprocess.run([sys.executable, "-c", body], env=env,
                           capture_output=True, text=True, timeout=300)
     assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
     assert "ALL_OK" in proc.stdout
+
+
+@pytest.mark.slow
+def test_gemm_modes_multidevice():
+    _run_subprocess(BODY)
+
+
+@pytest.mark.slow
+def test_plan_driven_dispatch_multidevice():
+    """dit_gemm(plan=...) resolves the tuned dataflow to the right mode."""
+    _run_subprocess(PLAN_BODY)

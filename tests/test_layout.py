@@ -1,6 +1,9 @@
 """HBM data layout (paper §3.2): split/placement schemes, preload packing."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(requirements-dev.txt)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

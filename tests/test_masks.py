@@ -1,6 +1,9 @@
 """Mask-based collective addressing: the paper's (i & M) == S group calculus
 and its equivalence with binary sub-axis decomposition (the TPU lowering)."""
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(requirements-dev.txt)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

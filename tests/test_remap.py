@@ -1,6 +1,9 @@
 """Cluster index remap (paper §3.1.2): logical-grid collectives lower to
 single physical mask groups."""
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(requirements-dev.txt)")
 from hypothesis import given
 from hypothesis import strategies as st
 

@@ -5,6 +5,8 @@ the reference point without specialized placement or on-chip communication.
 A's k-column is fetched by all gn tiles of a logical row (gn-fold HBM read
 amplification; gm-fold for B), which is exactly why its operational intensity
 is low in Fig. 7a.
+
+Mesh-execution analogue: `dit_gemm` mode `allgather` (docs/dataflows.md).
 """
 from __future__ import annotations
 

@@ -10,6 +10,8 @@ result to HBM.
 The payoff (Insight 3): for irregular shapes, gk > 1 buys gm/gn small enough
 that TM/TN stay matrix-engine-friendly (e.g. N=2112 over gn=4 -> TN=528
 instead of TN=66 on a 32x32 2-D mapping).
+
+Mesh-execution analogue: `dit_gemm` mode `splitk` (docs/dataflows.md).
 """
 from __future__ import annotations
 

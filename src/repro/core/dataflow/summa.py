@@ -12,6 +12,8 @@ compute supersteps.
 Double-buffered pipeline (§3.3.1): superstep s computes chunk t from working
 slot (t%2) while owners DMA-load + multicast chunk t+1 into slot ((t+1)%2) —
 two slots per operand buffer, no separate staging.
+
+Mesh-execution analogue: `dit_gemm` mode `summa` (docs/dataflows.md).
 """
 from __future__ import annotations
 

@@ -7,6 +7,8 @@ at superstep t + i + j; west-edge tiles inject A from HBM, north-edge tiles
 inject B. Loads are naturally staggered across supersteps (no HBM burst),
 but the wavefront costs gm + gn - 2 fill supersteps — the pipelining
 trade-off of Fig. 8.
+
+Mesh-execution analogue: `dit_gemm` mode `cannon` (docs/dataflows.md).
 """
 from __future__ import annotations
 

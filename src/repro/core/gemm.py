@@ -19,7 +19,13 @@ become `jax.lax` collectives inside `shard_map`:
 - **auto**: sharding-constrained einsum; XLA chooses the collective schedule.
 
 All modes are numerically validated against each other on a multi-device CPU
-mesh (tests/test_gemm_modes.py, subprocess with fake devices).
+mesh (tests/test_gemm_modes.py, subprocess with fake devices). The panel /
+skew / rotate loops are `lax.scan` (not `fori_loop`) so every mode is
+reverse-differentiable — plan-routed training matmuls backprop through the
+collectives.
+
+See docs/dataflows.md for the mode-by-mode collective patterns, divisibility
+preconditions, and fallback behavior.
 """
 from __future__ import annotations
 
@@ -62,7 +68,7 @@ def summa_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
         i = jax.lax.axis_index(row_axis)
         j = jax.lax.axis_index(col_axis)
 
-        def step(p, acc):
+        def step(acc, p):
             # A panel p lives on column p // dm at local offset (p % dm) * w
             a_pan = jax.lax.dynamic_slice_in_dim(a_loc, (p % dm) * w, w, axis=1)
             a_pan = jnp.where(j == p // dm, a_pan, jnp.zeros_like(a_pan))
@@ -71,10 +77,11 @@ def summa_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
             b_pan = jax.lax.dynamic_slice_in_dim(b_loc, (p % dn) * w, w, axis=0)
             b_pan = jnp.where(i == p // dn, b_pan, jnp.zeros_like(b_pan))
             b_pan = jax.lax.psum(b_pan, row_axis)          # owner broadcast
-            return acc + jnp.dot(a_pan, b_pan, preferred_element_type=jnp.float32)
+            acc = acc + jnp.dot(a_pan, b_pan, preferred_element_type=jnp.float32)
+            return acc, None
 
         acc = jnp.zeros((a_loc.shape[0], b_loc.shape[1]), dtype=jnp.float32)
-        acc = jax.lax.fori_loop(0, panels, step, acc)
+        acc, _ = jax.lax.scan(step, acc, jnp.arange(panels))
         return acc.astype(a_loc.dtype)
 
     spec2 = P(row_axis, col_axis)
@@ -108,26 +115,27 @@ def cannon_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
         # initial skew: A block (i, j) -> (i, j - i); B block (i, j) -> (i - j, j).
         # every device executes the same dm-1 uniform ppermutes (SPMD-safe)
         # and masks acceptance by its row/column index.
-        def skew_a(s, val):
+        def skew_a(val, s):
             shifted = jax.lax.ppermute(val, col_axis, left)
-            return jnp.where(i > s, shifted, val)
+            return jnp.where(i > s, shifted, val), None
 
-        def skew_b(s, val):
+        def skew_b(val, s):
             shifted = jax.lax.ppermute(val, row_axis, up)
-            return jnp.where(j > s, shifted, val)
+            return jnp.where(j > s, shifted, val), None
 
-        a_cur = jax.lax.fori_loop(0, nsteps - 1, skew_a, a_loc)
-        b_cur = jax.lax.fori_loop(0, nsteps - 1, skew_b, b_loc)
+        a_cur, _ = jax.lax.scan(skew_a, a_loc, jnp.arange(nsteps - 1))
+        b_cur, _ = jax.lax.scan(skew_b, b_loc, jnp.arange(nsteps - 1))
 
-        def step(s, carry):
+        def step(carry, _):
             a_cur, b_cur, acc = carry
             acc = acc + jnp.dot(a_cur, b_cur, preferred_element_type=jnp.float32)
             a_cur = jax.lax.ppermute(a_cur, col_axis, left)
             b_cur = jax.lax.ppermute(b_cur, row_axis, up)
-            return a_cur, b_cur, acc
+            return (a_cur, b_cur, acc), None
 
         acc = jnp.zeros((a_loc.shape[0], b_loc.shape[1]), dtype=jnp.float32)
-        _, _, acc = jax.lax.fori_loop(0, nsteps, step, (a_cur, b_cur, acc))
+        (_, _, acc), _ = jax.lax.scan(step, (a_cur, b_cur, acc), None,
+                                      length=nsteps)
         return acc.astype(a_loc.dtype)
 
     spec2 = P(row_axis, col_axis)
@@ -245,7 +253,16 @@ def dit_gemm(a: jax.Array, b: jax.Array, mesh: Mesh, mode: str = "auto",
     `planner` (a `repro.deploy.Planner`, consulted — and warmed — per shape)
     overrides `mode`: the tuned dataflow decides the collective pattern
     instead of the hardcoded default.
+
+    `a` may carry leading batch/seq dims (B, S, K): they flatten into M for
+    both the planner's GEMMShape and the shard_map dispatch, and the result
+    is reshaped back to (B, S, N). `b` must be 2-D (K, N).
     """
+    if b.ndim != 2:
+        raise ValueError(f"dit_gemm expects a 2-D weight, got {b.shape}")
+    lead = a.shape[:-1]
+    if a.ndim != 2:
+        a = a.reshape(-1, a.shape[-1])
     if planner is not None and plan is None:
         from repro.core.schedule import GEMMShape
         plan = planner.plan(GEMMShape(a.shape[0], b.shape[1], a.shape[1]))
@@ -268,14 +285,18 @@ def dit_gemm(a: jax.Array, b: jax.Array, mesh: Mesh, mode: str = "auto",
             # view) — let XLA place the collectives rather than crash.
             mode, kw = "auto", {}
     if mode == "auto":
-        return auto_gemm(a, b, mesh, row_axis, col_axis)
-    if mode == "summa":
-        return summa_gemm(a, b, mesh, row_axis, col_axis)
-    if mode == "cannon":
-        return cannon_gemm(a, b, mesh, row_axis, col_axis)
-    if mode == "splitk":
-        return splitk_gemm(a, b, mesh, k_axis=kw.get("k_axis", col_axis),
-                           scatter=kw.get("scatter", True))
-    if mode == "allgather":
-        return allgather_gemm(a, b, mesh, row_axis, col_axis)
-    raise KeyError(f"unknown mode {mode!r}; have {MODES}")
+        out = auto_gemm(a, b, mesh, row_axis, col_axis)
+    elif mode == "summa":
+        out = summa_gemm(a, b, mesh, row_axis, col_axis)
+    elif mode == "cannon":
+        out = cannon_gemm(a, b, mesh, row_axis, col_axis)
+    elif mode == "splitk":
+        out = splitk_gemm(a, b, mesh, k_axis=kw.get("k_axis", col_axis),
+                          scatter=kw.get("scatter", True))
+    elif mode == "allgather":
+        out = allgather_gemm(a, b, mesh, row_axis, col_axis)
+    else:
+        raise KeyError(f"unknown mode {mode!r}; have {MODES}")
+    if len(lead) != 1:
+        out = out.reshape(*lead, b.shape[1])
+    return out

@@ -15,13 +15,14 @@ from repro.deploy.plan import (DeploymentPlan, PLAN_SCHEMA_VERSION,
                                SOURCE_BUCKETED, SOURCE_TUNED, hw_fingerprint,
                                plan_from_tuning, schedule_from_dict,
                                schedule_to_dict, search_variant)
-from repro.deploy.planner import Planner, arch_workload, model_workload
+from repro.deploy.planner import (Planner, arch_workload, model_workload,
+                                  moe_dispatch_geometry, workload_coverage)
 
 __all__ = [
     "BucketingPolicy", "CacheStats", "DeploymentPlan", "PLAN_SCHEMA_VERSION",
     "PlanCache", "Planner", "SOURCE_BUCKETED", "SOURCE_TUNED", "adapt",
     "arch_workload", "bucket_of", "distance", "hw_fingerprint",
-    "model_workload", "nearest_tuned", "next_pow2", "plan_from_tuning",
-    "plan_key", "schedule_from_dict", "schedule_to_dict", "search_variant",
-    "transfer_candidates",
+    "model_workload", "moe_dispatch_geometry", "nearest_tuned", "next_pow2",
+    "plan_from_tuning", "plan_key", "schedule_from_dict", "schedule_to_dict",
+    "search_variant", "transfer_candidates", "workload_coverage",
 ]

@@ -73,6 +73,20 @@ class Planner:
                 return bucketed
         return self._tune_and_cache(shape)
 
+    def plan_cached(self, shape: GEMMShape) -> Optional[DeploymentPlan]:
+        """`plan` minus the full tune — the serving dispatch path.
+
+        Exact cache hit, else a bucketed transfer (which also queues the
+        shape for background refinement), else None. A cold shape never pays
+        a candidate search at trace time; the caller (`models.matmul.pmm`)
+        falls back to the auto dataflow and counts the miss.
+        """
+        cached = self.cache.get(shape, self.elem_bytes, self.hw,
+                                self.variant)
+        if cached is not None and self._admissible(cached.schedule):
+            return cached
+        return self._bucketed_plan(shape)
+
     def _admissible(self, schedule) -> bool:
         """Defensive check on top of the variant keying: a plan outside this
         planner's dataflow space (e.g. from a hand-edited cache dir) is a
@@ -216,47 +230,132 @@ class Planner:
 # Workload extraction
 # ---------------------------------------------------------------------------
 
+def moe_dispatch_geometry(tokens: int, cfg, dp: int = 1) -> Tuple[int, int]:
+    """(dispatch groups, per-group expert capacity) for `tokens` tokens.
+
+    Pure-int mirror of `repro.models.moe._dp_groups` / `_capacity` (the
+    deploy layer must stay importable without jax, so the logic is duplicated
+    here; tests/test_plan_routing.py pins the two in sync by comparing this
+    prediction against the shapes moe.apply_moe actually records). `dp` is
+    the data-parallel shard count the dispatch groups align to (1 when no
+    mesh is installed).
+    """
+    group_tokens = 512                      # moe._GROUP_TOKENS
+    if tokens % dp:
+        dp = 1
+    g = dp
+    while tokens % (g * 2) == 0 and tokens // (g * 2) >= group_tokens:
+        g *= 2
+    tl = tokens // g
+    cap = max(int(tl * cfg.moe_top_k * cfg.capacity_factor / cfg.n_experts), 4)
+    return g, cap
+
+
 def model_workload(cfg, batch: int, seq: int,
-                   kind: str = "prefill") -> List[GEMMShape]:
+                   kind: str = "prefill", dp: int = 1) -> List[GEMMShape]:
     """Deduplicated projection GEMMs of one forward pass of `cfg`.
 
     `cfg` is a `repro.models.common.ModelConfig` (duck-typed so the deploy
     layer stays importable without jax). Token dimension M is batch*seq for
-    train/prefill and batch for decode; weights supply (K, N).
+    train/prefill and batch for decode; weights supply (K, N). `dp` is the
+    data-parallel shard count of the mesh the model will trace under (1
+    when no mesh is installed) — it feeds the MoE dispatch-group geometry,
+    which aligns groups to the DP axes.
+
+    These are the shapes the model stack actually traces through
+    `models.matmul.pmm` — every entry is checked against the recorded
+    (tag, GEMMShape) pairs of a real forward pass in
+    tests/test_plan_routing.py, so launcher warm-ups tune exactly the GEMMs
+    that will be dispatched. Known gap: encoder-decoder cross-attention and
+    modality-frontend projections are not modeled yet (they surface as
+    `extra` shapes in `workload_coverage`).
     """
     tokens = batch * seq if kind in ("train", "prefill") else batch
     tokens = max(1, tokens)
     d, hd = cfg.d_model, cfg.hd
+    pattern = getattr(cfg, "block_pattern", "attn")
     shapes: List[GEMMShape] = []
 
     def gemm(m, n, k):
         if m > 0 and n > 0 and k > 0:
             shapes.append(GEMMShape(m, n, k))
 
-    # attention projections
-    if getattr(cfg, "attn", "gqa") == "mla":
+    # attention projections (xlstm stacks have no attention blocks)
+    if pattern == "xlstm":
+        d_inner = 2 * d
+        gemm(tokens, 2 * d_inner, d)                    # mLSTM up
+        gemm(tokens, d_inner, d_inner)                  # q / k / v (identical)
+        gemm(tokens, 2 * cfg.n_heads, d)                # i/f gate pre-acts
+        gemm(tokens, d, d_inner)                        # mLSTM down
+        gemm(tokens, 4 * d, d)                          # sLSTM in
+        gemm(tokens, d, d)                              # sLSTM out
+    elif getattr(cfg, "attn", "gqa") == "mla":
         if cfg.q_lora_rank:
             gemm(tokens, cfg.q_lora_rank, d)
         qdim = cfg.n_heads * (cfg.nope_head_dim + cfg.rope_head_dim)
         gemm(tokens, qdim, cfg.q_lora_rank or d)
-        gemm(tokens, cfg.kv_lora_rank + cfg.rope_head_dim, d)
-        gemm(tokens, cfg.n_heads * cfg.nope_head_dim, cfg.kv_lora_rank)
+        # the model runs the KV down-projection and the shared rotary key as
+        # two separate matmuls (attention.mla_attention), not one fused GEMM
+        gemm(tokens, cfg.kv_lora_rank, d)
+        gemm(tokens, cfg.rope_head_dim, d)
+        if kind == "decode":
+            # absorbed form: W_uk folds into the query and W_uv un-absorbs
+            # the latent output — per-head (r x dn) contractions, no K/V
+            # up-projection ever runs
+            gemm(tokens, cfg.kv_lora_rank, cfg.nope_head_dim)
+            gemm(tokens, cfg.nope_head_dim, cfg.kv_lora_rank)
+        else:
+            # naive form: up-project K and V (identical shapes) from c_kv
+            gemm(tokens, cfg.n_heads * cfg.nope_head_dim, cfg.kv_lora_rank)
         gemm(tokens, d, cfg.n_heads * cfg.nope_head_dim)
     else:
         gemm(tokens, cfg.n_heads * hd, d)               # Q
         gemm(tokens, cfg.n_kv_heads * hd, d)            # K and V (identical)
         gemm(tokens, d, cfg.n_heads * hd)               # O
+    # SSM mixer projections of the hybrid stacks (zamba2); the shared
+    # attention block above supplies the attn/FFN shapes
+    if pattern == "mamba2_hybrid":
+        d_inner = 2 * d
+        nh = d_inner // cfg.mamba_headdim
+        gemm(tokens, 2 * d_inner + 2 * cfg.ssm_state + nh, d)   # fused in
+        gemm(tokens, d, d_inner)                                # out
     # FFN (dense layers) and MoE experts
-    if cfg.d_ff:
+    if cfg.d_ff and pattern != "xlstm":
         gemm(tokens, cfg.d_ff, d)                       # gate / up (identical)
         gemm(tokens, d, cfg.d_ff)                       # down
     if cfg.n_experts and cfg.moe_top_k:
-        per_expert = max(1, tokens * cfg.moe_top_k // cfg.n_experts)
-        gemm(per_expert, cfg.moe_d_ff, d)
-        gemm(per_expert, d, cfg.moe_d_ff)
+        # per-expert M is the capacity-bounded dispatch buffer, not the mean
+        # token count: each (group, expert) GEMM runs at exactly `cap` rows
+        _, cap = moe_dispatch_geometry(tokens, cfg, dp=dp)
+        gemm(tokens, cfg.n_experts, d)                  # router
+        gemm(cap, cfg.moe_d_ff, d)                      # expert gate / up
+        gemm(cap, d, cfg.moe_d_ff)                      # expert down
+        if getattr(cfg, "n_shared_experts", 0):
+            sh_ff = cfg.moe_d_ff * cfg.n_shared_experts
+            gemm(tokens, sh_ff, d)
+            gemm(tokens, d, sh_ff)
     # LM head
     gemm(tokens, cfg.vocab, d)
     return list(dict.fromkeys(shapes))
+
+
+def workload_coverage(predicted: Sequence[GEMMShape],
+                      observed: Sequence[GEMMShape]) -> Dict[str, object]:
+    """Cross-validate `model_workload` against what the model actually ran.
+
+    `observed` is the deduplicated shape list a `GemmContext` recorded
+    (`stats.observed_shapes()`). Returns the predicted shapes that never
+    executed (`missing` — warm-up tuned something useless), the executed
+    shapes the prediction did not cover (`extra` — warm-up skipped real
+    traffic), and the covered fraction of the observed workload.
+    """
+    pred, obs = set(predicted), set(observed)
+    covered = len(obs & pred) / len(obs) if obs else 1.0
+    return {
+        "missing": sorted(pred - obs, key=lambda s: (s.m, s.n, s.k)),
+        "extra": sorted(obs - pred, key=lambda s: (s.m, s.n, s.k)),
+        "covered": covered,
+    }
 
 
 def arch_workload(cfg, shape_name: str) -> List[GEMMShape]:

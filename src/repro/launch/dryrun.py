@@ -185,12 +185,25 @@ def _dp_size(mesh) -> int:
 # ---------------------------------------------------------------------------
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             skip_accounting: bool = False) -> Dict[str, Any]:
+             skip_accounting: bool = False,
+             plan_cache: str = "",
+             plan_grid=(4, 4)) -> Dict[str, Any]:
     cfg = get_config(arch)
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
     from repro.models import shard_ctx
     shard_ctx.set_mesh(mesh)   # pin activation layouts during tracing
+    gemm_ctx = None
+    if plan_cache:
+        # record-only gemm context: every pmm the cell traces is logged so
+        # the JSON can cross-validate model_workload (and the warmed plan
+        # cache) against the GEMMs this (arch x shape x mesh) really runs.
+        # Routing stays off — the 512-chip compile proof must measure the
+        # production program, not the shard_map rewrite of it.
+        from repro.deploy.warmup import build_planner
+        planner = build_planner(plan_cache, plan_grid, max_candidates=12)
+        gemm_ctx = shard_ctx.GemmContext(mesh=None, planner=planner)
+        shard_ctx.set_gemm_context(gemm_ctx)
     out: Dict[str, Any] = {
         "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
         "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
@@ -223,6 +236,27 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     out["full"]["collective_bytes_raw"] = cs.total_bytes * n_chips
     out["full"]["collectives"] = cs.summary()
     del compiled, lowered
+
+    if gemm_ctx is not None:
+        from repro.deploy import model_workload, workload_coverage
+        observed = gemm_ctx.stats.observed_shapes()
+        # dp matters: moe dispatch groups align to the mesh's DP axes, so
+        # the predicted expert capacity must use this cell's mesh geometry
+        predicted = model_workload(cfg, specs["batch"], specs["seq"],
+                                   kind=specs["kind"], dp=_dp_size(mesh))
+        cov = workload_coverage(predicted, observed)
+        planner = gemm_ctx.planner
+        resolved = sum(1 for s in observed
+                       if planner.plan_cached(s) is not None)
+        out["workload"] = {
+            "observed": len(observed),
+            "predicted": len(predicted),
+            "covered": cov["covered"],
+            "extra": [[s.m, s.n, s.k] for s in cov["extra"]],
+            "missing": [[s.m, s.n, s.k] for s in cov["missing"]],
+            "plan_resolved": resolved,
+            "plan_resolve_rate": resolved / len(observed) if observed else 0.0,
+        }
 
     # 2. accounting configs for the roofline terms
     if not skip_accounting:
@@ -277,6 +311,12 @@ def main():
     ap.add_argument("--shape", required=True, choices=list(SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--skip-accounting", action="store_true")
+    ap.add_argument("--plan-cache", default="",
+                    help="warmed plan-cache dir; enables the record-only "
+                         "gemm context + workload coverage report")
+    ap.add_argument("--plan-grid", type=int, nargs=2, default=(4, 4),
+                    metavar=("R", "C"),
+                    help="pod grid the cache was warmed for (fingerprint)")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
 
@@ -285,7 +325,9 @@ def main():
     path = os.path.join(args.out, tag + ".json")
     try:
         result = run_cell(args.arch, args.shape, args.multi_pod,
-                          skip_accounting=args.skip_accounting)
+                          skip_accounting=args.skip_accounting,
+                          plan_cache=args.plan_cache,
+                          plan_grid=args.plan_grid)
         result["status"] = "ok"
     except Exception as e:
         result = {"arch": args.arch, "shape": args.shape,

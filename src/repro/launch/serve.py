@@ -1,10 +1,14 @@
 """Serving launcher: batched prefill + decode loop against preallocated
 KV caches. At startup the deployment-plan cache is warmed for the model's
-GEMM workload (bucketed shapes) and the decode-path schedules are reported;
-repeated launches resolve plans from the persisted store instead of
-re-tuning. The model stack's matmuls do not yet dispatch through
-`dit_gemm(plan=...)` — that wiring is a ROADMAP item; today the warmed
-cache is a startup artifact plus the schedule report below.
+GEMM workload (bucketed + exact shapes) and the decode-path schedules are
+reported; repeated launches resolve plans from the persisted store instead
+of re-tuning. The warmed planner is then installed as the model stack's
+`GemmContext`, so every `pmm` matmul dispatches through
+`dit_gemm(plan=...)` — the tuned dataflow, not a hardcoded mode, decides
+each GEMM's collective pattern. At shutdown the launcher reports the
+planner hit rate over the matmuls the model actually traced and
+cross-validates `model_workload`'s prediction against them
+(docs/architecture.md walks the full path).
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
       --batch 4 --prompt-len 32 --gen 32
@@ -19,15 +23,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_config
-from repro.deploy import Planner, model_workload
+from repro.deploy import Planner, model_workload, workload_coverage
 from repro.deploy.warmup import add_plan_args, build_planner, warm_buckets
+from repro.launch.mesh import make_host_mesh
+from repro.models import shard_ctx
 from repro.models.model import decode_init, decode_step, forward, init_params
 from repro.train.steps import make_serve_step
 
 
 def warm_plan_cache(cfg, batch: int, prompt_len: int, max_len: int,
                     cache_dir: str, grid, max_candidates: int) -> Planner:
-    """Batch-tune the model's (bucketed) GEMM workload into the plan cache."""
+    """Batch-tune the model's (bucketed) GEMM workload into the plan cache.
+
+    Warms BOTH the batched-prefill shapes (M = batch*prompt_len; a real
+    deployment prefills in one pass, and the persisted cache is its
+    artifact) and the decode shapes (M = batch) this launcher's
+    token-by-token loop actually executes."""
     planner = build_planner(cache_dir, grid, max_candidates)
     decode = model_workload(cfg, batch, max_len, kind="decode")
     workload = model_workload(cfg, batch, prompt_len, kind="prefill") + decode
@@ -43,6 +54,33 @@ def warm_plan_cache(cfg, batch: int, prompt_len: int, max_len: int,
     return planner
 
 
+def install_gemm_context(planner: Planner) -> shard_ctx.GemmContext:
+    """Route the model stack's matmuls through the warmed planner: install
+    the gemm context `models.matmul.pmm` consults at trace time."""
+    ctx = shard_ctx.GemmContext(mesh=make_host_mesh(), planner=planner)
+    shard_ctx.set_gemm_context(ctx)
+    return ctx
+
+
+def report_routing(ctx: shard_ctx.GemmContext, cfg, batch: int,
+                   max_len: int) -> None:
+    """Shutdown report: plan hit rate + model_workload cross-validation.
+
+    The prediction is the decode workload only: this launcher prefills
+    token-by-token through the cache, so every executed step is a
+    decode-shaped trace (M = batch). The batched-prefill shapes warmed at
+    startup are a cache artifact for real deployments, not something this
+    loop runs — comparing against them would report phantom gaps."""
+    stats = ctx.stats
+    print(f"plan routing: {stats.describe()}")
+    predicted = model_workload(cfg, batch, max_len, kind="decode")
+    cov = workload_coverage(predicted, stats.observed_shapes())
+    print(f"workload cross-validation: model_workload predicted "
+          f"{cov['covered']:.0%} of the {len(stats.observed_shapes())} "
+          f"executed GEMM shapes ({len(cov['extra'])} unpredicted, "
+          f"{len(cov['missing'])} predicted-but-unexecuted)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -51,6 +89,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--no-plan-routing", action="store_true",
+                    help="warm the cache but keep matmuls un-routed")
     add_plan_args(ap)
     args = ap.parse_args()
 
@@ -60,9 +100,13 @@ def main():
     key = jax.random.PRNGKey(1)
 
     max_len = args.prompt_len + args.gen
+    gemm_ctx = None
     if not args.skip_plan_warmup:
-        warm_plan_cache(cfg, args.batch, args.prompt_len, max_len,
-                        args.plan_cache, args.plan_grid, args.plan_candidates)
+        planner = warm_plan_cache(cfg, args.batch, args.prompt_len, max_len,
+                                  args.plan_cache, args.plan_grid,
+                                  args.plan_candidates)
+        if not args.no_plan_routing:
+            gemm_ctx = install_gemm_context(planner)
     caches = decode_init(params, cfg, args.batch, max_len)
     serve = jax.jit(make_serve_step(cfg))
 
@@ -105,6 +149,8 @@ def main():
     print("sample generations (token ids):")
     for row in gen[:2]:
         print(" ", row[:16].tolist())
+    if gemm_ctx is not None:
+        report_routing(gemm_ctx, cfg, args.batch, max_len)
 
 
 if __name__ == "__main__":

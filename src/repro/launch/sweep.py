@@ -45,11 +45,17 @@ def cell_done(out: str, arch: str, shape: str, mp: bool) -> bool:
         return False
 
 
-def run_one(out: str, arch: str, shape: str, mp: bool, timeout: int) -> str:
+def run_one(out: str, arch: str, shape: str, mp: bool, timeout: int,
+            plan_cache: str = "", plan_grid=(4, 4)) -> str:
     if cell_done(out, arch, shape, mp):
         return "cached"
     cmd = [sys.executable, "-m", "repro.launch.dryrun",
            "--arch", arch, "--shape", shape, "--out", out]
+    if plan_cache:
+        # cells record their traced GEMM workload against the warmed cache
+        # and report model_workload coverage in their JSON
+        cmd += ["--plan-cache", plan_cache,
+                "--plan-grid", str(plan_grid[0]), str(plan_grid[1])]
     if mp:
         cmd += ["--multi-pod", "--skip-accounting"]
     env = dict(os.environ)
@@ -89,9 +95,13 @@ def main():
     os.makedirs(args.out, exist_ok=True)
 
     archs = [args.only_arch] if args.only_arch else list_archs()
+    plan_cache = ""
     if not args.skip_plan_warmup:
         warm_plans(archs, args.plan_cache, args.plan_grid,
                    args.plan_candidates)
+        # cells (subprocesses) get the warmed cache via --plan-cache: each
+        # installs a record-only gemm context and reports workload coverage
+        plan_cache = args.plan_cache
     todo = []
     for arch in archs:
         for shape in cells(arch):
@@ -104,7 +114,9 @@ def main():
     for i, (arch, shape, mp) in enumerate(todo):
         tag = f"[{i+1}/{len(todo)}] {arch} {shape} {'2-pod' if mp else '1-pod'}"
         print(tag, "...", flush=True)
-        print(tag, "->", run_one(args.out, arch, shape, mp, args.timeout),
+        print(tag, "->", run_one(args.out, arch, shape, mp, args.timeout,
+                                 plan_cache=plan_cache,
+                                 plan_grid=args.plan_grid),
               flush=True)
 
 

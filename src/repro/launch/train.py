@@ -8,6 +8,11 @@ Production (a real pod):   same command without --smoke; the mesh comes from
 Features: deterministic stateless data, microbatching, optional int8 gradient
 compression on the DP all-reduce, atomic checkpoints + auto-resume, heartbeat
 files, straggler logging — the full DESIGN.md §5 story.
+
+At startup the deployment-plan cache is warmed for the training workload and
+installed as the model stack's gemm context, so the forward/backward matmuls
+route through `dit_gemm(plan=...)` (all dataflow modes are scan-based and
+reverse-differentiable). `--skip-plan-warmup` turns both off.
 """
 from __future__ import annotations
 
@@ -43,6 +48,8 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
+    from repro.deploy.warmup import add_plan_args
+    add_plan_args(ap)
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -51,6 +58,28 @@ def main():
     else:
         mesh = make_production_mesh(multi_pod=args.multi_pod)
         shard_ctx.set_mesh(mesh)
+
+    gemm_ctx = None
+    if not args.skip_plan_warmup:
+        from repro.deploy import model_workload
+        from repro.deploy.warmup import build_planner, warm_buckets
+        planner = build_planner(args.plan_cache, args.plan_grid,
+                                args.plan_candidates)
+        # dp: MoE dispatch groups align to the mesh's DP axes when the
+        # activation-sharding context is installed (production runs)
+        dp = 1
+        if shard_ctx.get_mesh() is not None:
+            for a in ("pod", "data"):
+                if a in mesh.axis_names:
+                    dp *= mesh.shape[a]
+        workload = model_workload(cfg, args.batch, args.seq, kind="train",
+                                  dp=dp)
+        warm_buckets(planner, workload)
+        # exact shapes: warm hits or cheap bucketed transfers, never a
+        # second full search on top of the bucket tunes above
+        planner.batch_tune(workload, allow_bucketed=True)
+        gemm_ctx = shard_ctx.GemmContext(mesh=mesh, planner=planner)
+        shard_ctx.set_gemm_context(gemm_ctx)
 
     opt = adamw.AdamWConfig(lr=args.lr, warmup_steps=max(5, args.steps // 20),
                             total_steps=args.steps)
@@ -88,6 +117,8 @@ def main():
                  make_batch_arrays=lambda b: {k: jnp.asarray(v)
                                               for k, v in b.items()},
                  on_metrics=on_metrics)
+    if gemm_ctx is not None:
+        print(f"plan routing: {gemm_ctx.stats.describe()}")
     print("done.")
 
 

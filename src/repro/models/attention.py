@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.models.common import (ModelConfig, Params, apply_rope, dense_init,
                                  rms_head_norm, rope_tables)
+from repro.models.matmul import pmm
 
 NEG_INF = -1e30
 
@@ -216,9 +217,11 @@ def gqa_attention(p: Params, x: jax.Array, cfg: ModelConfig,
     b, s, _ = x.shape
     hd = cfg.hd
     kv_src = kv_input if kv_input is not None else x
-    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
-    k = (kv_src @ p["wk"]).reshape(b, kv_src.shape[1], cfg.n_kv_heads, hd)
-    v = (kv_src @ p["wv"]).reshape(b, kv_src.shape[1], cfg.n_kv_heads, hd)
+    q = pmm(x, p["wq"], tag="attn.q").reshape(b, s, cfg.n_heads, hd)
+    k = pmm(kv_src, p["wk"], tag="attn.k").reshape(
+        b, kv_src.shape[1], cfg.n_kv_heads, hd)
+    v = pmm(kv_src, p["wv"], tag="attn.v").reshape(
+        b, kv_src.shape[1], cfg.n_kv_heads, hd)
     if cfg.qk_norm:
         q, k = rms_head_norm(q), rms_head_norm(k)
     if kv_input is None:  # RoPE only for self-attention
@@ -240,7 +243,8 @@ def gqa_attention(p: Params, x: jax.Array, cfg: ModelConfig,
         out = _sdpa(q, ck, cv, causal=True, q_positions=positions,
                     kv_len=kv_len)
         new_cache = {"k": ck, "v": cv, "index": idx + s}
-    return out.reshape(b, s, cfg.n_heads * hd) @ p["wo"], new_cache
+    return pmm(out.reshape(b, s, cfg.n_heads * hd), p["wo"],
+               tag="attn.o"), new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -285,14 +289,15 @@ def mla_attention(p: Params, x: jax.Array, cfg: ModelConfig,
     dn, dr, h, r = cfg.nope_head_dim, cfg.rope_head_dim, cfg.n_heads, cfg.kv_lora_rank
 
     if cfg.q_lora_rank:
-        q = (x @ p["w_dq"]) @ p["w_uq"]
+        q = pmm(pmm(x, p["w_dq"], tag="mla.q_down"), p["w_uq"],
+                tag="mla.q_up")
     else:
-        q = x @ p["wq"]
+        q = pmm(x, p["wq"], tag="mla.q")
     q = q.reshape(b, s, h, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
 
-    c_kv = x @ p["w_dkv"]                                  # (b, s, r)
-    k_r = (x @ p["w_kr"]).reshape(b, s, 1, dr)             # shared across heads
+    c_kv = pmm(x, p["w_dkv"], tag="mla.kv_down")           # (b, s, r)
+    k_r = pmm(x, p["w_kr"], tag="mla.k_rope").reshape(b, s, 1, dr)
 
     cos, sin = rope_tables(positions, dr, cfg.rope_theta)
     q_rope = apply_rope(q_rope, cos, sin)
@@ -312,8 +317,8 @@ def mla_attention(p: Params, x: jax.Array, cfg: ModelConfig,
     if cache is None:
         # naive form: up-project K/V once, flash attention at dim dn + dr.
         sk = c_kv.shape[1]
-        k_nope = (c_kv @ p["w_uk"]).reshape(b, sk, h, dn)
-        v = (c_kv @ p["w_uv"]).reshape(b, sk, h, dn)
+        k_nope = pmm(c_kv, p["w_uk"], tag="mla.k_up").reshape(b, sk, h, dn)
+        v = pmm(c_kv, p["w_uv"], tag="mla.v_up").reshape(b, sk, h, dn)
         k_full = jnp.concatenate(
             [k_nope, jnp.broadcast_to(k_r, (b, sk, h, dr))], axis=-1)
         q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
@@ -322,9 +327,13 @@ def mla_attention(p: Params, x: jax.Array, cfg: ModelConfig,
         else:
             out = _sdpa(q_full, k_full, v, causal=True, scale=scale)
         out = out.reshape(b, s, h * dn)
-        return out @ p["wo"], new_cache
+        return pmm(out, p["wo"], tag="mla.o"), new_cache
 
     # absorbed form (decode): q_lat[h] = q_nope[h] @ W_uk[h]^T  (b,s,h,r)
+    # per-head batched contraction, not a single dense GEMM — stays einsum
+    # but is logged so the observed workload covers the absorbed path
+    from repro.models.matmul import record_gemm
+    record_gemm("mla.q_absorb", b * s, r, dn)
     w_uk = p["w_uk"].reshape(r, h, dn)
     q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
     q_aug = jnp.concatenate([q_lat, q_rope], axis=-1)      # (b,s,h,r+dr)
@@ -335,9 +344,10 @@ def mla_attention(p: Params, x: jax.Array, cfg: ModelConfig,
                   kv_len=jnp.full((b,), kv_len, jnp.int32),
                   scale=scale)
     # un-absorb the values: out[h] = o_lat @ W_uv[h]
+    record_gemm("mla.v_unabsorb", b * s, dn, r)
     w_uv = p["w_uv"].reshape(r, h, dn)
     out = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv).reshape(b, s, h * dn)
-    return out @ p["wo"], new_cache
+    return pmm(out, p["wo"], tag="mla.o"), new_cache
 
 
 def make_kv_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, jax.Array]:

@@ -14,6 +14,8 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.models.matmul import pmm
+
 Params = Dict[str, Any]
 
 
@@ -164,5 +166,6 @@ def mlp_params(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
 
 
 def apply_mlp(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
-    h = activation(cfg, x @ p["gate"], x @ p["up"])
-    return h @ p["down"]
+    h = activation(cfg, pmm(x, p["gate"], tag="mlp.gate"),
+                   pmm(x, p["up"], tag="mlp.up"))
+    return pmm(h, p["down"], tag="mlp.down")

@@ -1,0 +1,102 @@
+"""Plan-routed matmul: the single funnel every dense model matmul goes
+through, so deployment schedules — not hand-written call sites — decide how
+each GEMM executes (the paper's core claim, applied to the model stack).
+
+`pmm(x, w, tag=...)` is a drop-in replacement for `x @ w`:
+
+- with no `GemmContext` installed it IS `x @ w` (bit-for-bit — smoke tests
+  and meshless tracing are unchanged);
+- with a record-only context (mesh=None) it additionally logs the
+  (tag, GEMMShape) pair it would have routed, the ground truth for
+  cross-validating `repro.deploy.planner.model_workload`;
+- with a live mesh+planner context it flattens leading batch/seq dims to a
+  2-D GEMM, consults the planner's warmed cache (exact hit, else bucketed
+  transfer — never a full tune on the dispatch path), and dispatches through
+  `repro.core.gemm.dit_gemm`, which maps the tuned dataflow onto mesh
+  collectives. Shapes with no usable plan still route through `dit_gemm`'s
+  auto mode and are counted as fallbacks in the context stats.
+
+The planner consult happens at trace time (GEMM shapes are static under
+jit), so routing costs nothing per executed step.
+
+Batched einsums that are not single dense GEMMs (MoE expert batches, MLA's
+absorbed-form contractions) keep their einsum form but log their per-GEMM
+shape via `record_gemm` so the observed workload stays complete.
+
+See docs/architecture.md (routing path) and docs/plan-lifecycle.md (how the
+plans pmm consults are produced, cached, and refined).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+
+from repro.core.schedule import GEMMShape
+from repro.models import shard_ctx
+
+
+def _gemm_shape(x: jax.Array, w: jax.Array) -> GEMMShape:
+    """The 2-D problem `x @ w` solves: leading dims of x flatten into M."""
+    return GEMMShape(m=int(math.prod(x.shape[:-1])), n=int(w.shape[-1]),
+                     k=int(x.shape[-1]))
+
+
+def _routable(x: jax.Array, w: jax.Array) -> bool:
+    return (w.ndim == 2 and x.ndim >= 2 and x.shape[-1] == w.shape[0]
+            and all(int(d) > 0 for d in x.shape))
+
+
+def record_gemm(tag: str, m: int, n: int, k: int) -> None:
+    """Log a GEMM executed outside `pmm` (batched expert einsums etc.) so the
+    observed workload covers everything the model runs."""
+    ctx = shard_ctx.get_gemm_context()
+    if ctx is not None and m > 0 and n > 0 and k > 0:
+        ctx.stats.record(tag, GEMMShape(m, n, k))
+
+
+def lookup_plan(planner, shape: GEMMShape):
+    """Dispatch-path plan lookup: (plan | None, 'hit' | 'bucketed' | None).
+
+    Never runs a full tune — serving traffic must not pay a candidate search
+    at trace time; cold shapes fall back to the auto dataflow and show up in
+    the stats (and in `Planner.pending_refinements` via the bucketed path).
+    Classification follows the served plan's provenance: 'hit' = born from a
+    full tune, 'bucketed' = adapted from a nearby tuned shape (whether the
+    transfer happened now or on an earlier lookup).
+    """
+    plan = planner.plan_cached(shape)
+    if plan is None:
+        return None, None
+    # "bucketed" == deploy.plan.SOURCE_BUCKETED (string literal keeps the
+    # model layer's imports free of the deploy package)
+    kind = "bucketed" if getattr(plan, "source", "") == "bucketed" else "hit"
+    return plan, kind
+
+
+def pmm(x: jax.Array, w: jax.Array, tag: str = "") -> jax.Array:
+    """Plan-routed `x @ w`. x: (..., K); w: (K, N) -> (..., N)."""
+    ctx = shard_ctx.get_gemm_context()
+    if ctx is None:
+        return x @ w
+    if not _routable(x, w):
+        # not a single dense GEMM this layer understands; stay out of the way
+        return x @ w
+    shape = _gemm_shape(x, w)
+    ctx.stats.record(tag, shape)
+    if ctx.mesh is None:
+        ctx.stats.unrouted += 1
+        return x @ w
+    from repro.core.gemm import dit_gemm   # lazy: keep import cycles at bay
+    plan = None
+    if ctx.planner is not None:
+        plan, kind = lookup_plan(ctx.planner, shape)
+        if kind == "hit":
+            ctx.stats.hits += 1
+        elif kind == "bucketed":
+            ctx.stats.bucketed += 1
+    if plan is None:
+        ctx.stats.fallback += 1
+    return dit_gemm(x, w, ctx.mesh, mode="auto", row_axis=ctx.row_axis,
+                    col_axis=ctx.col_axis, plan=plan)

@@ -30,6 +30,7 @@ from repro.models import moe as moe_lib
 from repro.models import ssm
 from repro.models.common import (ModelConfig, Params, apply_mlp, apply_norm,
                                  dense_init, mlp_params, norm_params)
+from repro.models.matmul import pmm
 
 
 # ---------------------------------------------------------------------------
@@ -227,13 +228,15 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
     x = shard_ctx.constrain_tokens(
         jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype))
     if prefix_embeds is not None:
-        pe = (prefix_embeds.astype(cfg.dtype) @ params["frontend_proj"])
+        pe = pmm(prefix_embeds.astype(cfg.dtype), params["frontend_proj"],
+                 tag="frontend.proj")
         x = jnp.concatenate([pe, x], axis=1)
     b, s, _ = x.shape
     positions = jnp.arange(s)
 
     if cfg.is_encoder_decoder:
-        enc = encoder_embeds.astype(cfg.dtype) @ params["frontend_proj"]
+        enc = pmm(encoder_embeds.astype(cfg.dtype), params["frontend_proj"],
+                  tag="frontend.proj")
         enc = _scan_group(
             params["encoder"], enc,
             lambda p, h: _attn_block(p, h, cfg, jnp.arange(enc.shape[1]),
@@ -296,11 +299,10 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
     x = apply_norm(params["ln_f"], x, cfg)
     if return_hidden:
         return x
-    head = params.get("lm_head")
-    if head is None:
-        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(cfg.dtype))
-    else:
-        logits = x @ head
+    # tied-embedding logits: x @ embed.T is the same dot_general the einsum
+    # lowered to, expressed as a routable dense GEMM (lm_head_weight
+    # transposes for the tied case)
+    logits = pmm(x, lm_head_weight(params, cfg), tag="lm_head")
     return logits.astype(jnp.float32)
 
 
@@ -464,9 +466,5 @@ def decode_step(params: Params, caches: Dict[str, Any], tokens: jax.Array,
         new_caches["slstm"] = new_csl
 
     x = apply_norm(params["ln_f"], x, cfg)
-    head = params.get("lm_head")
-    if head is None:
-        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(cfg.dtype))
-    else:
-        logits = x @ head
+    logits = pmm(x, lm_head_weight(params, cfg), tag="lm_head")
     return logits[:, -1].astype(jnp.float32), new_caches

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import ModelConfig, Params, activation, dense_init, mlp_params
+from repro.models.matmul import pmm, record_gemm
 
 
 def moe_params(key, cfg: ModelConfig) -> Params:
@@ -94,7 +95,8 @@ def apply_moe(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     xt = _constrain(x.reshape(g, tl, d), "dp", None, None)
 
     gates = jax.nn.softmax(
-        xt.astype(jnp.float32) @ p["router"], axis=-1)                # (G,TL,E)
+        pmm(xt.astype(jnp.float32), p["router"], tag="moe.router"),
+        axis=-1)                                                      # (G,TL,E)
     topv, topi = jax.lax.top_k(gates, k)                              # (G,TL,k)
     topv = topv / jnp.clip(topv.sum(-1, keepdims=True), 1e-9)         # renorm
 
@@ -125,6 +127,10 @@ def apply_moe(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
 
     # dispatch is local per (dp-group x expert-shard); expert GEMMs are
     # batched over (G, E) — sharded (dp, EP) so per-device work is 1/(dp*ep).
+    # Not a single dense GEMM, so they keep the einsum form; each logical
+    # (cap, d) x (d, f) problem is logged for the observed workload.
+    record_gemm("moe.expert_gate", cap, p["experts"]["gate"].shape[-1], d)
+    record_gemm("moe.expert_down", cap, d, p["experts"]["down"].shape[-2])
     xe = jnp.einsum("gtec,gtd->gecd", disp, xt)                       # (G,E,cap,D)
     xe = _constrain(xe, "dp", "model", None, None)
     h = activation(cfg,
@@ -137,6 +143,7 @@ def apply_moe(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     out = _constrain(out, "dp", None, None)
 
     if cfg.n_shared_experts:
-        sh = activation(cfg, xt @ p["shared"]["gate"], xt @ p["shared"]["up"])
-        out = out + sh @ p["shared"]["down"]
+        sh = activation(cfg, pmm(xt, p["shared"]["gate"], tag="moe.shared_gate"),
+                        pmm(xt, p["shared"]["up"], tag="moe.shared_up"))
+        out = out + pmm(sh, p["shared"]["down"], tag="moe.shared_down")
     return out.reshape(b, s, d)

@@ -1,19 +1,35 @@
-"""Activation-sharding context: pins the residual stream's layout.
+"""Launcher-installed execution context for the model stack.
 
-Without explicit constraints XLA's sharding propagation may legally trade
-batch sharding for contraction sharding on FSDP weights (each device then
-computes the FULL batch through a weight slice — same matmul FLOPs, but every
-downstream op replicates over the data axis; observed 2-4x compute inflation
-on the production mesh). Pinning `(batch=dp, seq=None, d_model=None)` at
-every block boundary keeps the program in the intended DP x TP regime — this
-is DiT's data-layout control (paper §3.2) applied to activations.
+Two layers, both set by launchers before tracing and no-ops when absent:
 
-The mesh is set by the launcher before tracing; smoke tests that trace with
-no mesh set are unaffected (constraints become no-ops).
+1. **Activation-sharding context** (`set_mesh` / `constrain_tokens`): pins
+   the residual stream's layout. Without explicit constraints XLA's sharding
+   propagation may legally trade batch sharding for contraction sharding on
+   FSDP weights (each device then computes the FULL batch through a weight
+   slice — same matmul FLOPs, but every downstream op replicates over the
+   data axis; observed 2-4x compute inflation on the production mesh).
+   Pinning `(batch=dp, seq=None, d_model=None)` at every block boundary
+   keeps the program in the intended DP x TP regime — this is DiT's
+   data-layout control (paper §3.2) applied to activations.
+
+2. **GEMM-routing context** (`set_gemm_context` / `GemmContext`): the mesh
+   context extended into a full gemm context. It carries the device mesh plus
+   the deployment `Planner` whose warmed plan cache decides how each model
+   matmul executes; `repro.models.matmul.pmm` consults it at trace time and
+   dispatches through `repro.core.gemm.dit_gemm`. The context also records
+   every (tag, GEMMShape) the model actually traces — the ground truth that
+   `repro.deploy.planner.model_workload` is cross-validated against — and
+   keeps routing stats (exact hit / bucketed / fallback) for the launcher's
+   shutdown report. With no context installed, `pmm` is exactly `x @ w`, so
+   smoke tests and meshless tracing are unchanged.
+
+See docs/architecture.md for the full routing path.
 """
 from __future__ import annotations
 
-from typing import Optional
+import contextlib
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -28,6 +44,92 @@ def set_mesh(mesh: Optional[Mesh]) -> None:
 
 def get_mesh() -> Optional[Mesh]:
     return _MESH
+
+
+# ---------------------------------------------------------------------------
+# GEMM-routing context
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GemmStats:
+    """Trace-time routing counters + the observed (tag, shape) workload.
+
+    Counts are per *traced* `pmm` call (shapes are static, so each jit trace
+    consults the planner once per callsite per layer group); `observed` maps
+    (tag, GEMMShape) -> trace count and is the model-side record that
+    `model_workload` predictions are checked against.
+    """
+    hits: int = 0          # served a fully-tuned plan
+    bucketed: int = 0      # served a bucket-transferred plan
+    fallback: int = 0      # no usable plan -> auto dataflow
+    unrouted: int = 0      # recorded but not routed (no mesh in the context)
+    observed: Dict[Tuple[str, object], int] = dataclasses.field(
+        default_factory=dict)
+
+    def record(self, tag: str, shape) -> None:
+        key = (tag, shape)
+        self.observed[key] = self.observed.get(key, 0) + 1
+
+    @property
+    def routed(self) -> int:
+        return self.hits + self.bucketed + self.fallback
+
+    @property
+    def resolved(self) -> int:
+        """Calls that found a cached or bucketed plan (the hit-rate numerator)."""
+        return self.hits + self.bucketed
+
+    @property
+    def resolve_rate(self) -> float:
+        return self.resolved / self.routed if self.routed else 0.0
+
+    def observed_shapes(self) -> List[object]:
+        """Deduplicated GEMMShapes the model actually traced."""
+        return list(dict.fromkeys(shape for (_, shape) in self.observed))
+
+    def describe(self) -> str:
+        return (f"pmm calls={self.routed + self.unrouted} routed={self.routed} "
+                f"(hits={self.hits} bucketed={self.bucketed} "
+                f"fallback={self.fallback}) unrouted={self.unrouted} "
+                f"plan-resolve-rate={self.resolve_rate:.0%}")
+
+
+@dataclasses.dataclass
+class GemmContext:
+    """What `pmm` needs to route a model matmul through `dit_gemm`.
+
+    mesh=None makes the context record-only: every pmm call is logged in
+    `stats.observed` but executes as plain `x @ w` (used by dry-runs and the
+    workload cross-validation tests, which trace without devices to spare).
+    """
+    mesh: Optional[Mesh] = None
+    planner: Optional[object] = None      # repro.deploy.Planner (duck-typed)
+    row_axis: str = "data"
+    col_axis: str = "model"
+    stats: GemmStats = dataclasses.field(default_factory=GemmStats)
+
+
+_GEMM_CTX: Optional[GemmContext] = None
+
+
+def set_gemm_context(ctx: Optional[GemmContext]) -> None:
+    global _GEMM_CTX
+    _GEMM_CTX = ctx
+
+
+def get_gemm_context() -> Optional[GemmContext]:
+    return _GEMM_CTX
+
+
+@contextlib.contextmanager
+def gemm_context(ctx: GemmContext) -> Iterator[GemmContext]:
+    """Scoped install (tests); launchers use set_gemm_context directly."""
+    prev = _GEMM_CTX
+    set_gemm_context(ctx)
+    try:
+        yield ctx
+    finally:
+        set_gemm_context(prev)
 
 
 def _dp(mesh: Mesh):

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import ModelConfig, Params, dense_init
+from repro.models.matmul import pmm
 
 CHUNK = 128
 
@@ -121,7 +122,7 @@ def mamba2_mixer(p: Params, x: jax.Array, cfg: ModelConfig,
     h = d_inner // cfg.mamba_headdim
     ph = cfg.mamba_headdim
 
-    proj = x @ p["w_in"]
+    proj = pmm(x, p["w_in"], tag="mamba.in")
     z, xr, b, c, dt = jnp.split(
         proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], axis=-1)
     conv_in = jnp.concatenate([xr, b, c], axis=-1)
@@ -155,7 +156,7 @@ def mamba2_mixer(p: Params, x: jax.Array, cfg: ModelConfig,
 
     y = y + xh * p["d_skip"][None, None, :, None].astype(x.dtype)
     y = y.reshape(bsz, s, d_inner) * jax.nn.silu(z)
-    out = y @ p["w_out"]
+    out = pmm(y, p["w_out"], tag="mamba.out")
     if state is None:
         return out, None
     return out, new_state
@@ -197,12 +198,13 @@ def mlstm_mixer(p: Params, x: jax.Array, cfg: ModelConfig,
     d_inner = 2 * d
     hd = d_inner // h
 
-    up = x @ p["w_up"]
+    up = pmm(x, p["w_up"], tag="mlstm.up")
     u, gate = jnp.split(up, 2, axis=-1)
-    q = (u @ p["w_q"]).reshape(bsz, s, h, hd)
-    k = (u @ p["w_k"]).reshape(bsz, s, h, hd) * hd ** -0.5
-    v = (u @ p["w_v"]).reshape(bsz, s, h, hd)
-    gates = (x.astype(jnp.float32) @ p["w_gates"]).reshape(bsz, s, h, 2)
+    q = pmm(u, p["w_q"], tag="mlstm.q").reshape(bsz, s, h, hd)
+    k = pmm(u, p["w_k"], tag="mlstm.k").reshape(bsz, s, h, hd) * hd ** -0.5
+    v = pmm(u, p["w_v"], tag="mlstm.v").reshape(bsz, s, h, hd)
+    gates = pmm(x.astype(jnp.float32), p["w_gates"],
+                tag="mlstm.gates").reshape(bsz, s, h, 2)
     i_pre, f_pre = gates[..., 0], gates[..., 1]
     logf = jax.nn.log_sigmoid(f_pre)                        # (B,S,H)
 
@@ -287,7 +289,7 @@ def mlstm_mixer(p: Params, x: jax.Array, cfg: ModelConfig,
         new_state = {"c": cm, "n": nv, "m": mm}
 
     y = y.reshape(bsz, s, d_inner) * jax.nn.silu(gate)
-    return y @ p["w_down"], new_state
+    return pmm(y, p["w_down"], tag="mlstm.down"), new_state
 
 
 def mlstm_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
@@ -320,7 +322,8 @@ def slstm_mixer(p: Params, x: jax.Array, cfg: ModelConfig,
     bsz, s, d = x.shape
     h = cfg.n_heads
     hd = d // h
-    pre_all = (x @ p["w_in"]).reshape(bsz, s, h, 4 * hd).astype(jnp.float32)
+    pre_all = pmm(x, p["w_in"], tag="slstm.in").reshape(
+        bsz, s, h, 4 * hd).astype(jnp.float32)
 
     def step4(carry, pre_t):
         c, n, m, hid = carry
@@ -343,7 +346,7 @@ def slstm_mixer(p: Params, x: jax.Array, cfg: ModelConfig,
     y = ys.swapaxes(0, 1).reshape(bsz, s, d).astype(x.dtype)
     new_state = None if state is None else {
         "c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3]}
-    return y @ p["w_out"], new_state
+    return pmm(y, p["w_out"], tag="slstm.out"), new_state
 
 
 def slstm_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:

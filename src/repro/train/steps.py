@@ -47,8 +47,10 @@ def chunked_xent(hidden: jax.Array, head_w: jax.Array, targets: jax.Array,
 
     def body(acc, xs):
         h_c, t_c = xs
+        from repro.models.matmul import pmm
         logits = _constrain_logits(
-            (h_c @ head_w).astype(jnp.float32), vocab)      # (b, c, V)
+            pmm(h_c, head_w, tag="lm_head.chunked").astype(jnp.float32),
+            vocab)                                          # (b, c, V)
         logz = jax.nn.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(logits, t_c[..., None].astype(jnp.int32),
                                    axis=-1)[..., 0]

@@ -13,13 +13,14 @@ import traceback
 def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (fig7_case_study, fig9_11_gh200, fig12_portability,
-                            microbench, plan_bench)
+                            microbench, plan_bench, routing_bench)
     modules = [
         ("fig7", fig7_case_study),
         ("fig9-11", fig9_11_gh200),
         ("fig12", fig12_portability),
         ("micro", microbench),
         ("plan", plan_bench),
+        ("routing", routing_bench),
     ]
     try:
         from benchmarks import roofline_table

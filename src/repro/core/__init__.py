@@ -2,6 +2,8 @@
 collective calculus, data-layout engine, dataflow pattern builders, autotuner,
 and the distributed `dit_gemm` for the TPU target."""
 from repro.core.schedule import GEMMShape, Schedule, Tiling, build_program
+from repro.core.lower import (EXEC_MODES, ExecPlan, Fallback, MeshView,
+                              lower_schedule, lowering_summary)
 from repro.core.masks import (MaskSpec, TileGroup, all_group, col_group,
                               rect_group, row_group, strided_group)
 from repro.core.remap import ClusterRemap, candidate_remaps, flat_mask_group
@@ -12,6 +14,8 @@ from repro.core.ir import (BufferDecl, DMAOp, MMADOp, MulticastOp, P2POp,
 
 __all__ = [
     "GEMMShape", "Schedule", "Tiling", "build_program",
+    "EXEC_MODES", "ExecPlan", "Fallback", "MeshView", "lower_schedule",
+    "lowering_summary",
     "MaskSpec", "TileGroup", "all_group", "col_group", "rect_group",
     "row_group", "strided_group",
     "ClusterRemap", "candidate_remaps", "flat_mask_group",

@@ -16,8 +16,9 @@ The logical grid is partitioned into an outer (Om x On) grid of inner
 All collectives here are single hardware mask collectives: inner rows/cols and
 outer-strided rows/cols fix aligned power-of-2 bit-ranges of the flat index.
 
-No dedicated mesh mode: `mode_from_schedule` executes hierarchical
-schedules' summa-shaped composition as `summa` (docs/dataflows.md).
+Mesh-execution analogue: `dit_gemm` mode `hierarchical` — both compositions
+lower (via `repro.core.lower.lower_schedule`) to outer SUMMA over inner
+Cannon groups on a 4-axis mesh view (docs/dataflows.md).
 """
 from __future__ import annotations
 

@@ -11,32 +11,47 @@ become `jax.lax` collectives inside `shard_map`:
 - **cannon** (Fig. 6b systolic): Cannon's algorithm — initial skew, then
   rotate A west / B north with `ppermute` (nearest-neighbour ICI hops) and
   accumulate. Square meshes.
-- **splitk** (Fig. 6e): K sharded; local partial GEMM then `psum_scatter`
+- **splitk** (Fig. 6e, 1-D): K sharded; local partial GEMM then `psum_scatter`
   (reduction ownership round-robined over the k-group — §3.1.1's reduction
   policy; `psum` keeps a replicated C = the 'first'-owner policy analogue).
+- **splitk_summa** (Fig. 6e, 3-D): the schedule's gk k-groups each run SUMMA
+  over a (row × col) sub-grid on their K slice, then the partials NoC-reduce
+  over a dedicated k sub-axis of the mesh — the tuned (gm × gn × gk) logical
+  grid mapped onto a mesh view instead of collapsing to 1-D split-K.
+- **hierarchical** (Fig. 6c/6d analogue): outer SUMMA over inner Cannon
+  groups — each physical axis splits into (outer, inner) per
+  `Schedule.inner`; owner groups psum-broadcast outer K-panels along the
+  outer axes while each inner group contracts its panel systolically.
 - **allgather** (beyond-paper baseline): gather all panels once, single local
   GEMM. Highest memory, fewest collectives — XLA's default TP pattern.
 - **auto**: sharding-constrained einsum; XLA chooses the collective schedule.
 
+Schedule-driven dispatch goes through `repro.core.lower.lower_schedule`,
+which resolves the tuned dataflow + logical grid into an `ExecPlan` (mode,
+mesh view, kwargs, explicit fallback chain); `dit_gemm` consumes the plan.
+
 All modes are numerically validated against each other on a multi-device CPU
-mesh (tests/test_gemm_modes.py, subprocess with fake devices). The panel /
-skew / rotate loops are `lax.scan` (not `fori_loop`) so every mode is
-reverse-differentiable — plan-routed training matmuls backprop through the
-collectives.
+mesh (tests/test_gemm_modes.py, tests/test_lowering.py; subprocess with fake
+devices). The panel / skew / rotate loops are `lax.scan` (not `fori_loop`)
+so every mode is reverse-differentiable — plan-routed training matmuls
+backprop through the collectives.
 
 See docs/dataflows.md for the mode-by-mode collective patterns, divisibility
-preconditions, and fallback behavior.
+preconditions, and fallback reasons.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core.lower import ExecPlan, lower_schedule
+
+# modes dispatchable by name; the plan-only modes (splitk_summa,
+# hierarchical) additionally need a mesh view — see lower.EXEC_MODES.
 MODES = ("auto", "summa", "cannon", "splitk", "allgather")
 
 
@@ -47,6 +62,36 @@ def _axis_size(mesh: Mesh, name: str) -> int:
 # ---------------------------------------------------------------------------
 # SUMMA
 # ---------------------------------------------------------------------------
+
+def _summa_acc(a_loc: jax.Array, b_loc: jax.Array, row_axis: str,
+               col_axis: str, dm: int, dn: int) -> jax.Array:
+    """fp32 SUMMA accumulation of the local C block over dm*dn K-panels.
+
+    Runs inside shard_map over (row_axis, col_axis) — which may be sub-axes
+    of a larger mesh view, in which case the broadcasts stay within the
+    enclosing group (the k-group of splitk_summa).
+    """
+    panels = dm * dn
+    w = a_loc.shape[1] // dm
+    i = jax.lax.axis_index(row_axis)
+    j = jax.lax.axis_index(col_axis)
+
+    def step(acc, p):
+        # A panel p lives on column p // dm at local offset (p % dm) * w
+        a_pan = jax.lax.dynamic_slice_in_dim(a_loc, (p % dm) * w, w, axis=1)
+        a_pan = jnp.where(j == p // dm, a_pan, jnp.zeros_like(a_pan))
+        a_pan = jax.lax.psum(a_pan, col_axis)          # owner broadcast
+        # B panel p lives on row p // dn at local offset (p % dn) * w
+        b_pan = jax.lax.dynamic_slice_in_dim(b_loc, (p % dn) * w, w, axis=0)
+        b_pan = jnp.where(i == p // dn, b_pan, jnp.zeros_like(b_pan))
+        b_pan = jax.lax.psum(b_pan, row_axis)          # owner broadcast
+        acc = acc + jnp.dot(a_pan, b_pan, preferred_element_type=jnp.float32)
+        return acc, None
+
+    acc = jnp.zeros((a_loc.shape[0], b_loc.shape[1]), dtype=jnp.float32)
+    acc, _ = jax.lax.scan(step, acc, jnp.arange(panels))
+    return acc
+
 
 def summa_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
                row_axis: str = "data", col_axis: str = "model") -> jax.Array:
@@ -61,28 +106,10 @@ def summa_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
     panels = dm * dn
     if k % panels:
         raise ValueError(f"K={k} must divide by {panels} SUMMA panels")
-    w = k // panels
 
     def body(a_loc, b_loc):
-        # a_loc: (m/dm, k/dn) holds dm panels; b_loc: (k/dm, n/dn) holds dn.
-        i = jax.lax.axis_index(row_axis)
-        j = jax.lax.axis_index(col_axis)
-
-        def step(acc, p):
-            # A panel p lives on column p // dm at local offset (p % dm) * w
-            a_pan = jax.lax.dynamic_slice_in_dim(a_loc, (p % dm) * w, w, axis=1)
-            a_pan = jnp.where(j == p // dm, a_pan, jnp.zeros_like(a_pan))
-            a_pan = jax.lax.psum(a_pan, col_axis)          # owner broadcast
-            # B panel p lives on row p // dn at local offset (p % dn) * w
-            b_pan = jax.lax.dynamic_slice_in_dim(b_loc, (p % dn) * w, w, axis=0)
-            b_pan = jnp.where(i == p // dn, b_pan, jnp.zeros_like(b_pan))
-            b_pan = jax.lax.psum(b_pan, row_axis)          # owner broadcast
-            acc = acc + jnp.dot(a_pan, b_pan, preferred_element_type=jnp.float32)
-            return acc, None
-
-        acc = jnp.zeros((a_loc.shape[0], b_loc.shape[1]), dtype=jnp.float32)
-        acc, _ = jax.lax.scan(step, acc, jnp.arange(panels))
-        return acc.astype(a_loc.dtype)
+        return _summa_acc(a_loc, b_loc, row_axis, col_axis,
+                          dm, dn).astype(a_loc.dtype)
 
     spec2 = P(row_axis, col_axis)
     return shard_map(body, mesh=mesh, in_specs=(spec2, spec2),
@@ -92,6 +119,45 @@ def summa_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
 # ---------------------------------------------------------------------------
 # Cannon (systolic)
 # ---------------------------------------------------------------------------
+
+def _cannon_acc(a_blk: jax.Array, b_blk: jax.Array, row_axis: str,
+                col_axis: str, d: int) -> jax.Array:
+    """fp32 Cannon accumulation on a square d x d (sub-)grid: initial skew,
+    then d rotate-and-accumulate steps over `ppermute` rings.
+
+    Like `_summa_acc`, the axes may be inner sub-axes of a mesh view — the
+    wavefront then stays within each inner group (hierarchical mode).
+    """
+    left = [(s, (s - 1) % d) for s in range(d)]          # shift along cols
+    up = [(s, (s - 1) % d) for s in range(d)]            # shift along rows
+    i = jax.lax.axis_index(row_axis)
+    j = jax.lax.axis_index(col_axis)
+
+    # initial skew: A block (i, j) -> (i, j - i); B block (i, j) -> (i - j, j).
+    # every device executes the same d-1 uniform ppermutes (SPMD-safe)
+    # and masks acceptance by its row/column index.
+    def skew_a(val, s):
+        shifted = jax.lax.ppermute(val, col_axis, left)
+        return jnp.where(i > s, shifted, val), None
+
+    def skew_b(val, s):
+        shifted = jax.lax.ppermute(val, row_axis, up)
+        return jnp.where(j > s, shifted, val), None
+
+    a_cur, _ = jax.lax.scan(skew_a, a_blk, jnp.arange(d - 1))
+    b_cur, _ = jax.lax.scan(skew_b, b_blk, jnp.arange(d - 1))
+
+    def step(carry, _):
+        a_cur, b_cur, acc = carry
+        acc = acc + jnp.dot(a_cur, b_cur, preferred_element_type=jnp.float32)
+        a_cur = jax.lax.ppermute(a_cur, col_axis, left)
+        b_cur = jax.lax.ppermute(b_cur, row_axis, up)
+        return (a_cur, b_cur, acc), None
+
+    acc = jnp.zeros((a_blk.shape[0], b_blk.shape[1]), dtype=jnp.float32)
+    (_, _, acc), _ = jax.lax.scan(step, (a_cur, b_cur, acc), None, length=d)
+    return acc
+
 
 def cannon_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
                 row_axis: str = "data", col_axis: str = "model") -> jax.Array:
@@ -103,40 +169,10 @@ def cannon_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
     dm, dn = _axis_size(mesh, row_axis), _axis_size(mesh, col_axis)
     if dm != dn:
         raise ValueError(f"cannon needs a square mesh, got {dm}x{dn}")
-    nsteps = dm
-
-    left = [(s, (s - 1) % dn) for s in range(dn)]        # shift along cols
-    up = [(s, (s - 1) % dm) for s in range(dm)]          # shift along rows
 
     def body(a_loc, b_loc):
-        i = jax.lax.axis_index(row_axis)
-        j = jax.lax.axis_index(col_axis)
-
-        # initial skew: A block (i, j) -> (i, j - i); B block (i, j) -> (i - j, j).
-        # every device executes the same dm-1 uniform ppermutes (SPMD-safe)
-        # and masks acceptance by its row/column index.
-        def skew_a(val, s):
-            shifted = jax.lax.ppermute(val, col_axis, left)
-            return jnp.where(i > s, shifted, val), None
-
-        def skew_b(val, s):
-            shifted = jax.lax.ppermute(val, row_axis, up)
-            return jnp.where(j > s, shifted, val), None
-
-        a_cur, _ = jax.lax.scan(skew_a, a_loc, jnp.arange(nsteps - 1))
-        b_cur, _ = jax.lax.scan(skew_b, b_loc, jnp.arange(nsteps - 1))
-
-        def step(carry, _):
-            a_cur, b_cur, acc = carry
-            acc = acc + jnp.dot(a_cur, b_cur, preferred_element_type=jnp.float32)
-            a_cur = jax.lax.ppermute(a_cur, col_axis, left)
-            b_cur = jax.lax.ppermute(b_cur, row_axis, up)
-            return (a_cur, b_cur, acc), None
-
-        acc = jnp.zeros((a_loc.shape[0], b_loc.shape[1]), dtype=jnp.float32)
-        (_, _, acc), _ = jax.lax.scan(step, (a_cur, b_cur, acc), None,
-                                      length=nsteps)
-        return acc.astype(a_loc.dtype)
+        return _cannon_acc(a_loc, b_loc, row_axis, col_axis,
+                           dm).astype(a_loc.dtype)
 
     spec2 = P(row_axis, col_axis)
     return shard_map(body, mesh=mesh, in_specs=(spec2, spec2),
@@ -144,7 +180,7 @@ def cannon_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
 
 
 # ---------------------------------------------------------------------------
-# Split-K
+# Split-K (1-D and the schedule's 3-D grid)
 # ---------------------------------------------------------------------------
 
 def splitk_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
@@ -173,6 +209,110 @@ def splitk_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
     out_specs = P(k_axis, None) if scatter else P(None, None)
     return shard_map(body, mesh=mesh, in_specs=in_specs,
                      out_specs=out_specs, check_rep=False)(a, b)
+
+
+def splitk_summa_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
+                      row_axis: str = "data", col_axis: str = "model",
+                      k_axis: str = "splitk",
+                      scatter: bool = True) -> jax.Array:
+    """3-D split-K on a (row × col × k) mesh view: each of the gk k-groups
+    runs SUMMA over its (row × col) sub-grid on a K/gk slice, then partials
+    reduce over the k sub-axis.
+
+    A is sharded (m: row, k: k-major/col-minor), B (k: k-major/row-minor,
+    n: col) — each k-group holds a contiguous K slice laid out exactly as
+    plain SUMMA expects. scatter=True round-robins C row-blocks over the
+    k-group (out spec P((row, k), col)); scatter=False psums to a C
+    replicated over k.
+    """
+    rm, rn = _axis_size(mesh, row_axis), _axis_size(mesh, col_axis)
+    gk = _axis_size(mesh, k_axis)
+    m, k = a.shape
+    if k % (gk * rm * rn):
+        raise ValueError(f"K={k} must divide by gk*rm*rn={gk * rm * rn}")
+    if scatter and m % (rm * gk):
+        raise ValueError(f"M={m} must divide by rm*gk={rm * gk} for scatter")
+
+    def body(a_loc, b_loc):
+        acc = _summa_acc(a_loc, b_loc, row_axis, col_axis, rm, rn)
+        if scatter:
+            out = jax.lax.psum_scatter(acc, k_axis, scatter_dimension=0,
+                                       tiled=True)
+        else:
+            out = jax.lax.psum(acc, k_axis)
+        return out.astype(a_loc.dtype)
+
+    in_specs = (P(row_axis, (k_axis, col_axis)), P((k_axis, row_axis), col_axis))
+    out_specs = (P((row_axis, k_axis), col_axis) if scatter
+                 else P(row_axis, col_axis))
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical: outer SUMMA over inner Cannon groups
+# ---------------------------------------------------------------------------
+
+def hierarchical_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
+                      row_axis: str = "data", col_axis: str = "model",
+                      inner_row: str = "data_in",
+                      inner_col: str = "model_in") -> jax.Array:
+    """Hierarchical dataflow on an (outer_row × inner_row × outer_col ×
+    inner_col) mesh view — the mesh analogue of the paper's Fig. 6c/6d
+    compositions: the outer (Om × On) grid of inner (ih × ih) groups runs
+    SUMMA at the group level while each group contracts its K-panel with
+    Cannon's wavefront.
+
+    Per outer panel p (of Om*On): the owner outer-column psum-broadcasts the
+    A panel along `col_axis`, the owner outer-row the B panel along
+    `row_axis` (masked-psum = the mask-based multicast of §2.1, here between
+    whole tile groups); each device slices its Cannon block from the
+    group-gathered panel, and the inner group accumulates it systolically.
+    """
+    om, ih = _axis_size(mesh, row_axis), _axis_size(mesh, inner_row)
+    on, iw = _axis_size(mesh, col_axis), _axis_size(mesh, inner_col)
+    if ih != iw:
+        raise ValueError(f"hierarchical needs square inner groups, got {ih}x{iw}")
+    m, k = a.shape
+    _, n = b.shape
+    if k % (om * on * ih):
+        raise ValueError(f"K={k} must divide by Om*On*ih={om * on * ih}")
+    wo = k // (om * on)          # outer K-panel width (per group)
+    wk = wo // ih                # inner Cannon block width
+    panels = om * on
+
+    def body(a_loc, b_loc):
+        oi = jax.lax.axis_index(row_axis)
+        oj = jax.lax.axis_index(col_axis)
+        li = jax.lax.axis_index(inner_row)
+        lj = jax.lax.axis_index(inner_col)
+        # reassemble each group's contiguous K range so any outer panel can
+        # be sliced uniformly (alignment-free at the cost of one gather)
+        a_g = jax.lax.all_gather(a_loc, inner_col, axis=1, tiled=True)
+        b_g = jax.lax.all_gather(b_loc, inner_row, axis=0, tiled=True)
+
+        def outer_step(acc, p):
+            # A panel p: owner outer-col p // om, group-local offset
+            # (p % om) * wo; this device's Cannon block is k sub-chunk lj
+            a_pan = jax.lax.dynamic_slice_in_dim(
+                a_g, (p % om) * wo + lj * wk, wk, axis=1)
+            a_pan = jnp.where(oj == p // om, a_pan, jnp.zeros_like(a_pan))
+            a_pan = jax.lax.psum(a_pan, col_axis)       # group broadcast
+            # B panel p: owner outer-row p // on; Cannon block = sub-chunk li
+            b_pan = jax.lax.dynamic_slice_in_dim(
+                b_g, (p % on) * wo + li * wk, wk, axis=0)
+            b_pan = jnp.where(oi == p // on, b_pan, jnp.zeros_like(b_pan))
+            b_pan = jax.lax.psum(b_pan, row_axis)       # group broadcast
+            acc = acc + _cannon_acc(a_pan, b_pan, inner_row, inner_col, ih)
+            return acc, None
+
+        acc = jnp.zeros((a_loc.shape[0], b_loc.shape[1]), dtype=jnp.float32)
+        acc, _ = jax.lax.scan(outer_step, acc, jnp.arange(panels))
+        return acc.astype(a_loc.dtype)
+
+    spec = P((row_axis, inner_row), (col_axis, inner_col))
+    return shard_map(body, mesh=mesh, in_specs=(spec, spec), out_specs=spec,
+                     check_rep=False)(a, b)
 
 
 # ---------------------------------------------------------------------------
@@ -205,54 +345,56 @@ def auto_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
     return out.astype(a.dtype)
 
 
-def mode_from_schedule(schedule, mesh: Mesh, row_axis: str = "data",
-                       col_axis: str = "model") -> Tuple[str, dict]:
-    """Map a tuned `Schedule`'s dataflow onto a mesh dispatch (mode, kwargs).
+# ---------------------------------------------------------------------------
+# ExecPlan dispatch
+# ---------------------------------------------------------------------------
 
-    The SoftHier dataflow names translate to their shard_map analogues:
-    splitk_summa -> splitk (scatter iff the schedule's reduction owner is
-    round-robined), systolic -> cannon (square meshes only; rectangular
-    meshes fall back to summa, the paper's default), baseline -> allgather,
-    everything summa-shaped -> summa. `schedule` is duck-typed (dataflow +
-    reduce_owner), so both core Schedules and deserialized plans work.
-    """
-    df = getattr(schedule, "dataflow", "summa")
-    kw: dict = {}
-    if df == "splitk_summa":
-        kw["k_axis"] = col_axis
-        kw["scatter"] = getattr(schedule, "reduce_owner", "") == "round_robin"
-        return "splitk", kw
-    if df == "systolic":
-        if _axis_size(mesh, row_axis) == _axis_size(mesh, col_axis):
-            return "cannon", kw
-        return "summa", kw
-    if df == "baseline":
-        return "allgather", kw
-    return "summa", kw
-
-
-def _mode_divisible(mode: str, m: int, n: int, k: int, mesh: Mesh,
-                    row_axis: str, col_axis: str, k_axis: str) -> bool:
-    """Whether `mode`'s shard_map specs legally tile (m, n, k) on `mesh`."""
-    dm, dn = _axis_size(mesh, row_axis), _axis_size(mesh, col_axis)
+def exec_plan_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
+                   exec_plan: ExecPlan) -> jax.Array:
+    """Run one 2-D GEMM exactly as a resolved `ExecPlan` prescribes."""
+    ax = exec_plan.axes
+    emesh = (exec_plan.view.materialize(mesh) if exec_plan.view is not None
+             else mesh)
+    mode = exec_plan.mode
+    if mode == "auto":
+        return auto_gemm(a, b, mesh, ax["row"], ax["col"])
     if mode == "summa":
-        return m % dm == 0 and n % dn == 0 and k % (dm * dn) == 0
-    if mode in ("cannon", "allgather"):
-        return m % dm == 0 and n % dn == 0 and k % dm == 0 and k % dn == 0
+        return summa_gemm(a, b, emesh, ax["row"], ax["col"])
+    if mode == "cannon":
+        return cannon_gemm(a, b, emesh, ax["row"], ax["col"])
+    if mode == "allgather":
+        return allgather_gemm(a, b, emesh, ax["row"], ax["col"])
     if mode == "splitk":
-        return k % _axis_size(mesh, k_axis) == 0
-    return True                                     # auto shards anything
+        return splitk_gemm(a, b, emesh, k_axis=ax["k"],
+                           scatter=exec_plan.kwargs.get("scatter", True))
+    if mode == "splitk_summa":
+        return splitk_summa_gemm(a, b, emesh, ax["row"], ax["col"], ax["k"],
+                                 scatter=exec_plan.kwargs.get("scatter", True))
+    if mode == "hierarchical":
+        return hierarchical_gemm(a, b, emesh, ax["row"], ax["col"],
+                                 ax["inner_row"], ax["inner_col"])
+    raise KeyError(f"ExecPlan resolved to unknown mode {mode!r}")
 
 
 def dit_gemm(a: jax.Array, b: jax.Array, mesh: Mesh, mode: str = "auto",
              row_axis: str = "data", col_axis: str = "model",
-             plan=None, planner=None, **kw) -> jax.Array:
+             plan=None, planner=None, exec_plan: Optional[ExecPlan] = None,
+             **kw) -> jax.Array:
     """Dispatch on the deployment schedule's dataflow pattern.
 
-    `plan` (a `repro.deploy.DeploymentPlan` or a bare `Schedule`) or
-    `planner` (a `repro.deploy.Planner`, consulted — and warmed — per shape)
-    overrides `mode`: the tuned dataflow decides the collective pattern
-    instead of the hardcoded default.
+    Three override layers, strongest first:
+
+    - `exec_plan` (a `repro.core.lower.ExecPlan`): a pre-resolved lowering —
+      dispatched verbatim (this is how `models.matmul.pmm` calls after
+      recording the plan's fallback chain in its stats).
+    - `plan` (a `repro.deploy.DeploymentPlan` or a bare `Schedule`) or
+      `planner` (a `repro.deploy.Planner`, consulted — and warmed — per
+      shape): the tuned schedule is lowered here via `lower_schedule`
+      against the actual operand shapes; caller `**kw` dispatch knobs
+      (currently `scatter`) merge into the mode kwargs *before* legality,
+      so validation sees exactly what dispatch will use — geometry knobs
+      are the schedule's alone.
+    - `mode` + `**kw`: direct dispatch of one of `MODES`.
 
     `a` may carry leading batch/seq dims (B, S, K): they flatten into M for
     both the planner's GEMMShape and the shard_map dispatch, and the result
@@ -266,25 +408,14 @@ def dit_gemm(a: jax.Array, b: jax.Array, mesh: Mesh, mode: str = "auto",
     if planner is not None and plan is None:
         from repro.core.schedule import GEMMShape
         plan = planner.plan(GEMMShape(a.shape[0], b.shape[1], a.shape[1]))
-    if plan is not None:
+    if exec_plan is None and plan is not None:
         sched = getattr(plan, "schedule", plan)
-        mode, plan_kw = mode_from_schedule(sched, mesh, row_axis, col_axis)
-        kw = {**plan_kw, **kw}      # merge BEFORE validating: the legality
-        # checks below must see the same values dispatch will use, caller
-        # overrides included.
-        if mode == "splitk" and kw.get("scatter"):
-            # psum_scatter needs M divisible by the k-group; degrade to the
-            # replicated-C reduction ('first'-owner policy) when it isn't.
-            if a.shape[0] % _axis_size(mesh, kw["k_axis"]):
-                kw["scatter"] = False
-        if not _mode_divisible(mode, a.shape[0], b.shape[1], a.shape[1],
-                               mesh, row_axis, col_axis,
-                               kw.get("k_axis", col_axis)):
-            # the tuned grid doesn't legally shard these arrays on this
-            # mesh (e.g. a SoftHier plan transferred to a mismatched pod
-            # view) — let XLA place the collectives rather than crash.
-            mode, kw = "auto", {}
-    if mode == "auto":
+        exec_plan = lower_schedule(sched, mesh, row_axis, col_axis,
+                                   shape=(a.shape[0], b.shape[1], a.shape[1]),
+                                   overrides=kw)
+    if exec_plan is not None:
+        out = exec_plan_gemm(a, b, mesh, exec_plan)
+    elif mode == "auto":
         out = auto_gemm(a, b, mesh, row_axis, col_axis)
     elif mode == "summa":
         out = summa_gemm(a, b, mesh, row_axis, col_axis)

@@ -1,0 +1,328 @@
+"""Faithful schedule→mesh lowering (paper §3 applied to the TPU target).
+
+`lower_schedule(schedule, mesh, row_axis, col_axis) -> ExecPlan` resolves a
+tuned `Schedule` into the exact collective program the mesh will execute —
+*before* dispatch, with every degradation recorded. The tuned deployment
+schedule IS the program: the logical (gm × gn × gk) grid, the hierarchical
+inner-group shape, and the reduction-owner policy all survive to execution
+instead of collapsing onto whatever 2-D pattern happens to fit.
+
+Three layers of resolution:
+
+1. **Dataflow mapping** — each of the six `DATAFLOWS` has an explicit
+   lowering (no silent default branch): `summa` → `summa`, `systolic` →
+   `cannon`, `baseline` → `allgather`, `splitk_summa` → the 3-D
+   `splitk_summa` mode, and both hierarchical dataflows → the `hierarchical`
+   mode (outer SUMMA over inner Cannon groups — the first mesh analogue of
+   Fig. 6c/6d; the two compositions share it).
+2. **Mesh-view construction** — when a schedule needs more grid axes than
+   the physical mesh exposes, `MeshView` describes sub-axis splits of the
+   physical axes: a gk>1 split-K schedule factors gk out of the row or
+   column axis (k-groups stay physically adjacent), so a 2×2×2 grid runs as
+   true 3-D split-K on an 8-device mesh instead of collapsing to 1-D;
+   hierarchical schedules split both axes into (outer, inner) per
+   `Schedule.inner`. The view is materialized into a real `jax` Mesh only
+   at dispatch time, so lowering itself needs no devices (unit-testable
+   with a bare namespace exposing `.shape`).
+3. **Legality** — the chosen mode's divisibility preconditions are checked
+   against the *actual* problem shape (not the schedule's tuned shape —
+   bucketed transfers serve neighbours). Every miss appends a `Fallback`
+   with a machine-readable reason and moves down the chain
+   (e.g. `hierarchical → summa → auto`); nothing degrades silently.
+
+`repro.core.gemm.dit_gemm` consumes the ExecPlan; `models.matmul.pmm`
+records it in `GemmContext.stats` so launchers report *why* routing
+degraded, not just that it did. See docs/dataflows.md for the full
+lowering table.
+
+This module is importable without jax (only `MeshView.materialize` touches
+it), so the deploy layer and device-free tests can reason about lowering.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+# -- machine-readable fallback reasons --------------------------------------
+# mode changes
+NON_SQUARE_SYSTOLIC = "non_square_systolic"   # cannon needs dm == dn -> summa
+NON_SQUARE_INNER = "non_square_inner"         # inner cannon group not square -> summa
+INNER_GRID_MISMATCH = "inner_grid_mismatch"   # inner group doesn't divide the mesh -> summa
+GRID_MISMATCH = "grid_mismatch"               # gk factors into neither mesh axis -> 1-D splitk
+GK_IS_ONE = "gk_is_one"                       # splitk_summa with gk == 1 IS 2-D summa
+UNKNOWN_DATAFLOW = "unknown_dataflow"         # unrecognized name -> summa (paper default)
+M_NOT_DIVISIBLE = "m_not_divisible"           # -> auto
+N_NOT_DIVISIBLE = "n_not_divisible"           # -> auto
+K_NOT_DIVISIBLE = "k_not_divisible"           # -> auto
+# kwarg demotion (mode unchanged)
+SCATTER_M_INDIVISIBLE = "scatter_m_indivisible"  # psum_scatter -> psum
+
+REASONS = (NON_SQUARE_SYSTOLIC, NON_SQUARE_INNER, INNER_GRID_MISMATCH,
+           GRID_MISMATCH, GK_IS_ONE, UNKNOWN_DATAFLOW, M_NOT_DIVISIBLE,
+           N_NOT_DIVISIBLE, K_NOT_DIVISIBLE, SCATTER_M_INDIVISIBLE)
+
+# modes an ExecPlan can resolve to (superset of gemm.MODES: the 3-D split-K
+# and hierarchical modes need a mesh view, so they are plan-only)
+EXEC_MODES = ("auto", "summa", "cannon", "splitk", "splitk_summa",
+              "hierarchical", "allgather")
+
+# sub-axis names introduced by mesh views
+K_AXIS = "splitk"
+INNER_SUFFIX = "_in"
+
+
+@dataclasses.dataclass(frozen=True)
+class Fallback:
+    """One recorded degradation step of the lowering chain."""
+    reason: str
+    from_mode: str
+    to_mode: str
+
+    def describe(self) -> str:
+        return f"{self.from_mode}->{self.to_mode}[{self.reason}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshView:
+    """Sub-axis splits of a physical mesh, materialized at dispatch time.
+
+    `splits` maps a physical axis name to the ordered (name, size) sub-axes
+    it splits into (outer-major, so split products preserve device order and
+    minor sub-axes stay physically adjacent). Axes not named pass through.
+    """
+    splits: Tuple[Tuple[str, Tuple[Tuple[str, int], ...]], ...]
+
+    def axis_sizes(self, mesh) -> Dict[str, int]:
+        """The viewed mesh's {axis: size} without materializing it."""
+        out: Dict[str, int] = {}
+        split_map = dict(self.splits)
+        for ax in mesh.axis_names:
+            if ax in split_map:
+                out.update(split_map[ax])
+            else:
+                out[ax] = mesh.shape[ax]
+        return out
+
+    def materialize(self, mesh):
+        """Reshape `mesh.devices` into the viewed grid (same device order)."""
+        from jax.sharding import Mesh
+        split_map = dict(self.splits)
+        dims: List[int] = []
+        names: List[str] = []
+        for ax in mesh.axis_names:
+            for name, size in split_map.get(ax, ((ax, mesh.shape[ax]),)):
+                names.append(name)
+                dims.append(size)
+        return Mesh(mesh.devices.reshape(dims), tuple(names))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecPlan:
+    """The resolved execution of one GEMM: mode + mesh view + kwargs + the
+    fallback chain that produced them.
+
+    `axes` maps roles -> axis names in the (viewed) mesh: always `row` and
+    `col`; `k` for the split-K modes; `inner_row`/`inner_col` for
+    hierarchical. `kwargs` carries mode knobs (`scatter`). `view` is None
+    when the physical mesh is used as-is.
+    """
+    mode: str
+    axes: Mapping[str, str]
+    kwargs: Mapping[str, Any]
+    view: Optional[MeshView]
+    requested: str                      # the schedule's dataflow name
+    grid: Tuple[int, int, int]          # the schedule's (gm, gn, gk)
+    shape: Tuple[int, int, int]         # the actual (m, n, k) lowered for
+    fallbacks: Tuple[Fallback, ...] = ()
+
+    @property
+    def degraded(self) -> bool:
+        """Did the lowering land on `auto` (XLA places the collectives)?"""
+        return any(f.to_mode == "auto" for f in self.fallbacks)
+
+    def reasons(self) -> Tuple[str, ...]:
+        return tuple(f.reason for f in self.fallbacks)
+
+    def describe(self) -> str:
+        chain = " ".join(f.describe() for f in self.fallbacks)
+        gm, gn, gk = self.grid
+        return (f"{self.requested}[{gm}x{gn}x{gk}] -> {self.mode}"
+                + (f" ({chain})" if chain else ""))
+
+
+def _shape3(shape) -> Tuple[int, int, int]:
+    if shape is None:
+        raise ValueError("lower_schedule needs a problem shape: pass shape= "
+                         "or a schedule with a .shape")
+    if hasattr(shape, "m"):
+        return int(shape.m), int(shape.n), int(shape.k)
+    m, n, k = shape
+    return int(m), int(n), int(k)
+
+
+def lower_schedule(schedule, mesh, row_axis: str = "data",
+                   col_axis: str = "model", shape=None,
+                   overrides: Optional[Mapping[str, Any]] = None) -> ExecPlan:
+    """Resolve a tuned `Schedule` into an `ExecPlan` for `mesh`.
+
+    `schedule` is duck-typed (dataflow / tiling / inner / reduce_owner /
+    shape), so core Schedules and deserialized plans both work; `mesh` only
+    needs `.shape[axis]` (a real Mesh is required only to materialize the
+    view at dispatch). `shape` is the actual problem (GEMMShape or (m, n, k)
+    tuple) — it defaults to the schedule's tuned shape but dispatch must
+    pass the real operands' shape, which bucketed serving can differ on.
+    `overrides` are caller dispatch knobs (currently only `scatter`) merged
+    into the mode kwargs *before* legality, so validation sees exactly what
+    dispatch will use (the scatter/M drift bug). Geometry is never
+    overridable — the mesh view is the schedule's alone, so a caller knob
+    cannot diverge from the view it is validated against.
+    """
+    df = getattr(schedule, "dataflow", "summa")
+    tiling = getattr(schedule, "tiling", None)
+    grid = (int(getattr(tiling, "gm", 1)), int(getattr(tiling, "gn", 1)),
+            int(getattr(tiling, "gk", 1)))
+    m, n, k = _shape3(shape if shape is not None
+                      else getattr(schedule, "shape", None))
+    dm, dn = int(mesh.shape[row_axis]), int(mesh.shape[col_axis])
+
+    fallbacks: List[Fallback] = []
+
+    def fall(reason: str, from_mode: str, to_mode: str) -> None:
+        fallbacks.append(Fallback(reason, from_mode, to_mode))
+
+    axes: Dict[str, str] = {"row": row_axis, "col": col_axis}
+    kwargs: Dict[str, Any] = {}
+    view: Optional[MeshView] = None
+    # the effective 2-D/3-D grid the chosen mode runs on
+    rm, rn, gk = dm, dn, 1
+
+    # -- 1. dataflow mapping + mesh-view construction -----------------------
+    if df == "baseline":
+        mode = "allgather"
+    elif df == "summa":
+        mode = "summa"
+    elif df == "systolic":
+        if dm != dn:
+            fall(NON_SQUARE_SYSTOLIC, "cannon", "summa")
+            mode = "summa"
+        else:
+            mode = "cannon"
+    elif df in ("systolic_over_summa", "summa_over_systolic"):
+        ih, iw = getattr(schedule, "inner", (2, 2))
+        if ih != iw:
+            fall(NON_SQUARE_INNER, "hierarchical", "summa")
+            mode = "summa"
+        elif dm % ih or dn % iw:
+            fall(INNER_GRID_MISMATCH, "hierarchical", "summa")
+            mode = "summa"
+        else:
+            mode = "hierarchical"
+            irow, icol = row_axis + INNER_SUFFIX, col_axis + INNER_SUFFIX
+            view = MeshView(splits=(
+                (row_axis, ((row_axis, dm // ih), (irow, ih))),
+                (col_axis, ((col_axis, dn // iw), (icol, iw)))))
+            axes.update(inner_row=irow, inner_col=icol)
+            kwargs["inner"] = (ih, iw)
+    elif df == "splitk_summa":
+        gk = grid[2]
+        kwargs["scatter"] = getattr(schedule, "reduce_owner", "") == "round_robin"
+        if gk <= 1:
+            # a 2-D split-K schedule IS summa (one K-slice owns everything)
+            fall(GK_IS_ONE, "splitk_summa", "summa")
+            mode = "summa"
+            kwargs.pop("scatter")
+            gk = 1
+        elif dn % gk == 0:
+            # factor the k sub-axis out of the column axis, k minor so each
+            # k-group's devices stay physically adjacent for the reduction
+            mode = "splitk_summa"
+            rm, rn = dm, dn // gk
+            view = MeshView(splits=(
+                (col_axis, ((col_axis, rn), (K_AXIS, gk))),))
+            axes["k"] = K_AXIS
+        elif dm % gk == 0:
+            mode = "splitk_summa"
+            rm, rn = dm // gk, dn
+            view = MeshView(splits=(
+                (row_axis, ((row_axis, rm), (K_AXIS, gk))),))
+            axes["k"] = K_AXIS
+        else:
+            # the tuned k-grid factors into neither physical axis: collapse
+            # to 1-D split-K over the column axis — recorded, not silent
+            fall(GRID_MISMATCH, "splitk_summa", "splitk")
+            mode = "splitk"
+            axes["k"] = col_axis
+    else:
+        fall(UNKNOWN_DATAFLOW, df, "summa")
+        mode = "summa"
+
+    if overrides:
+        kwargs.update({key: val for key, val in overrides.items()
+                       if key in ("scatter",)})
+
+    # -- 2. legality against the actual problem shape -----------------------
+    reason = None
+    if mode == "summa":
+        if m % dm:
+            reason = M_NOT_DIVISIBLE
+        elif n % dn:
+            reason = N_NOT_DIVISIBLE
+        elif k % (dm * dn):
+            reason = K_NOT_DIVISIBLE
+    elif mode in ("cannon", "allgather"):
+        if m % dm:
+            reason = M_NOT_DIVISIBLE
+        elif n % dn:
+            reason = N_NOT_DIVISIBLE
+        elif k % dm or k % dn:
+            reason = K_NOT_DIVISIBLE
+    elif mode == "splitk":
+        dk = dn if axes["k"] == col_axis else dm
+        if k % dk:
+            reason = K_NOT_DIVISIBLE
+        elif kwargs.get("scatter") and m % dk:
+            fall(SCATTER_M_INDIVISIBLE, "splitk", "splitk")
+            kwargs["scatter"] = False
+    elif mode == "splitk_summa":
+        if m % rm:
+            reason = M_NOT_DIVISIBLE
+        elif n % rn:
+            reason = N_NOT_DIVISIBLE
+        elif k % (gk * rm * rn):
+            reason = K_NOT_DIVISIBLE
+        elif kwargs.get("scatter") and m % (rm * gk):
+            fall(SCATTER_M_INDIVISIBLE, "splitk_summa", "splitk_summa")
+            kwargs["scatter"] = False
+    elif mode == "hierarchical":
+        ih = kwargs["inner"][0]
+        om, on = dm // ih, dn // ih
+        if m % dm:
+            reason = M_NOT_DIVISIBLE
+        elif n % dn:
+            reason = N_NOT_DIVISIBLE
+        elif k % (om * on * ih):
+            reason = K_NOT_DIVISIBLE
+    if reason is not None:
+        fall(reason, mode, "auto")
+        mode, view = "auto", None
+        axes, kwargs = {"row": row_axis, "col": col_axis}, {}
+
+    return ExecPlan(mode=mode, axes=axes, kwargs=kwargs, view=view,
+                    requested=df, grid=grid, shape=(m, n, k),
+                    fallbacks=tuple(fallbacks))
+
+
+def lowering_summary(plans: Sequence[ExecPlan]) -> Dict[str, Any]:
+    """Aggregate counters for a batch of ExecPlans (benchmark / report)."""
+    modes: Dict[str, int] = {}
+    reasons: Dict[str, int] = {}
+    silent = 0
+    for ep in plans:
+        modes[ep.mode] = modes.get(ep.mode, 0) + 1
+        for f in ep.fallbacks:
+            reasons[f.reason] = reasons.get(f.reason, 0) + 1
+        if ep.mode == "auto" and not ep.fallbacks:
+            silent += 1
+    return {"modes": modes, "degrade_reasons": reasons,
+            "degraded": sum(1 for ep in plans if ep.degraded),
+            "silent_auto_degrades": silent, "total": len(plans)}

@@ -267,8 +267,8 @@ def model_workload(cfg, batch: int, seq: int,
     (tag, GEMMShape) pairs of a real forward pass in
     tests/test_plan_routing.py, so launcher warm-ups tune exactly the GEMMs
     that will be dispatched. Known gap: encoder-decoder cross-attention and
-    modality-frontend projections are not modeled yet (they surface as
-    `extra` shapes in `workload_coverage`).
+    encoder-side blocks are not modeled yet (they surface as `extra` shapes
+    in `workload_coverage` for seamless).
     """
     tokens = batch * seq if kind in ("train", "prefill") else batch
     tokens = max(1, tokens)
@@ -279,6 +279,19 @@ def model_workload(cfg, batch: int, seq: int,
     def gemm(m, n, k):
         if m > 0 and n > 0 and k > 0:
             shapes.append(GEMMShape(m, n, k))
+
+    # modality frontend stub: the learned (d x d) projection applied to the
+    # precomputed patch/frame embeddings (models.model.forward tags it
+    # frontend.proj). Decode steps never re-run the frontend. For the VLM
+    # frontends the projected prefix is prepended to the token sequence, so
+    # every downstream block GEMM runs at batch*(n_prefix + seq) rows.
+    front = getattr(cfg, "frontend", "none")
+    n_prefix = getattr(cfg, "n_prefix", 0)
+    if front in ("vision_stub", "audio_stub") and n_prefix \
+            and kind in ("train", "prefill"):
+        gemm(batch * n_prefix, d, d)                    # frontend.proj
+        if not getattr(cfg, "is_encoder_decoder", False):
+            tokens += batch * n_prefix                  # prefix joins the seq
 
     # attention projections (xlstm stacks have no attention blocks)
     if pattern == "xlstm":

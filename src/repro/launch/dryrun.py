@@ -19,6 +19,13 @@ the sweep script loops and caches).
 Usage:
   python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k \
       [--multi-pod] [--skip-accounting] --out results/dryrun
+
+With --plan-cache the cell also cross-validates the deployment-plan
+workload (record-only). Adding --route compiles the cell with plan routing
+ON — every model matmul dispatches through its tuned dataflow's shard_map
+collectives on the 16x16 production mesh and the JSON reports per-reason
+lowering fallbacks (the ROADMAP routed-compile proof; pair with
+--skip-accounting to keep the measurement to the one routed compile).
 """
 import argparse
 import dataclasses
@@ -180,6 +187,16 @@ def _dp_size(mesh) -> int:
     return n
 
 
+def _cost_analysis(compiled) -> Dict[str, float]:
+    """compiled.cost_analysis() normalized to one dict: jax returns a plain
+    dict for most executables but a per-module list for some partitioned
+    programs (observed with routed shard_map matmuls in the step)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 # ---------------------------------------------------------------------------
 # per-cell run
 # ---------------------------------------------------------------------------
@@ -187,7 +204,8 @@ def _dp_size(mesh) -> int:
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              skip_accounting: bool = False,
              plan_cache: str = "",
-             plan_grid=(4, 4)) -> Dict[str, Any]:
+             plan_grid=(4, 4),
+             route: bool = False) -> Dict[str, Any]:
     cfg = get_config(arch)
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
@@ -195,18 +213,32 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     shard_ctx.set_mesh(mesh)   # pin activation layouts during tracing
     gemm_ctx = None
     if plan_cache:
-        # record-only gemm context: every pmm the cell traces is logged so
-        # the JSON can cross-validate model_workload (and the warmed plan
-        # cache) against the GEMMs this (arch x shape x mesh) really runs.
-        # Routing stays off — the 512-chip compile proof must measure the
-        # production program, not the shard_map rewrite of it.
-        from repro.deploy.warmup import build_planner
+        # Default: record-only gemm context — every pmm the cell traces is
+        # logged so the JSON can cross-validate model_workload (and the
+        # warmed plan cache) against the GEMMs this (arch x shape x mesh)
+        # really runs, while the compile measures the untouched production
+        # program. --route flips the context live: the cell's workload is
+        # warmed into the planner and every model matmul compiles through
+        # its tuned dataflow's shard_map collectives on the production mesh
+        # (the ROADMAP "16x16 routed compile proof"), with per-reason
+        # fallback counts in the JSON — no silent auto degrades.
+        from repro.deploy.warmup import build_planner, warm_buckets
         planner = build_planner(plan_cache, plan_grid, max_candidates=12)
-        gemm_ctx = shard_ctx.GemmContext(mesh=None, planner=planner)
+        if route:
+            from repro.deploy import model_workload
+            specs0 = input_specs(cfg, shape_name)
+            workload = model_workload(cfg, specs0["batch"], specs0["seq"],
+                                      kind=specs0["kind"], dp=_dp_size(mesh))
+            warm_buckets(planner, workload)
+            planner.batch_tune(workload, allow_bucketed=True)
+            gemm_ctx = shard_ctx.GemmContext(mesh=mesh, planner=planner)
+        else:
+            gemm_ctx = shard_ctx.GemmContext(mesh=None, planner=planner)
         shard_ctx.set_gemm_context(gemm_ctx)
     out: Dict[str, Any] = {
         "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
         "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "routed": bool(route),
     }
     t0 = time.time()
 
@@ -229,7 +261,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     # cost_analysis is PER-DEVICE on the partitioned module (verified
     # empirically); scale by n_chips for global numbers. Loop bodies are
     # counted once, hence the accounting configs below for the real terms.
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_analysis(compiled)
     out["full"]["hlo_flops_raw"] = float(ca.get("flops", 0.0)) * n_chips
     out["full"]["hlo_bytes_raw"] = float(ca.get("bytes accessed", 0.0)) * n_chips
     cs = collective_stats(compiled.as_text())
@@ -257,6 +289,19 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             "plan_resolved": resolved,
             "plan_resolve_rate": resolved / len(observed) if observed else 0.0,
         }
+        if route:
+            st = gemm_ctx.stats
+            out["routing"] = {
+                "modes": dict(sorted(st.modes.items())),
+                "degrade_reasons": dict(sorted(st.degrades.items())),
+                # degraded == landed on auto; reasons like non_square_systolic
+                # or a scatter demotion still execute a tuned dataflow
+                "degraded": st.modes.get("auto", 0),
+                "silent_auto_degrades": st.silent_degrades,
+                "hits": st.hits, "bucketed": st.bucketed,
+                "fallback": st.fallback,
+                "resolve_rate": st.resolve_rate,
+            }
 
     # 2. accounting configs for the roofline terms
     if not skip_accounting:
@@ -266,7 +311,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             with accounting.accounting_mode(specs["seq"]):
                 low, _ = build_lowered(c, shape_name, mesh, donate=False)
                 comp = low.compile()
-            cai = comp.cost_analysis() or {}
+            cai = _cost_analysis(comp)
             csi = collective_stats(comp.as_text())
             vals[tag] = {         # x n_chips: per-device -> global
                 "flops": float(cai.get("flops", 0.0)) * n_chips,
@@ -317,17 +362,29 @@ def main():
     ap.add_argument("--plan-grid", type=int, nargs=2, default=(4, 4),
                     metavar=("R", "C"),
                     help="pod grid the cache was warmed for (fingerprint)")
+    ap.add_argument("--route", action="store_true",
+                    help="compile with plan routing ON: warm the planner for "
+                         "this cell's workload and dispatch every model "
+                         "matmul through its tuned dataflow's collectives "
+                         "on the production mesh (requires --plan-cache); "
+                         "the JSON gains a 'routing' section with "
+                         "per-reason fallback counts")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
+    if args.route and not args.plan_cache:
+        ap.error("--route requires --plan-cache")
 
     os.makedirs(args.out, exist_ok=True)
     tag = f"{args.arch}__{args.shape}__{'mp' if args.multi_pod else 'sp'}"
+    if args.route:
+        tag += "__routed"
     path = os.path.join(args.out, tag + ".json")
     try:
         result = run_cell(args.arch, args.shape, args.multi_pod,
                           skip_accounting=args.skip_accounting,
                           plan_cache=args.plan_cache,
-                          plan_grid=args.plan_grid)
+                          plan_grid=args.plan_grid,
+                          route=args.route)
         result["status"] = "ok"
     except Exception as e:
         result = {"arch": args.arch, "shape": args.shape,

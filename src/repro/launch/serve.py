@@ -73,6 +73,12 @@ def report_routing(ctx: shard_ctx.GemmContext, cfg, batch: int,
     loop runs — comparing against them would report phantom gaps."""
     stats = ctx.stats
     print(f"plan routing: {stats.describe()}")
+    if stats.modes:
+        print(f"lowered modes: {dict(sorted(stats.modes.items()))}")
+    if stats.degrades or stats.silent_degrades:
+        print(f"routing degrades (by reason): "
+              f"{dict(sorted(stats.degrades.items()))} "
+              f"silent-auto={stats.silent_degrades}")
     predicted = model_workload(cfg, batch, max_len, kind="decode")
     cov = workload_coverage(predicted, stats.observed_shapes())
     print(f"workload cross-validation: model_workload predicted "

@@ -11,8 +11,10 @@ files, straggler logging — the full DESIGN.md §5 story.
 
 At startup the deployment-plan cache is warmed for the training workload and
 installed as the model stack's gemm context, so the forward/backward matmuls
-route through `dit_gemm(plan=...)` (all dataflow modes are scan-based and
-reverse-differentiable). `--skip-plan-warmup` turns both off.
+route through `dit_gemm(exec_plan=...)` (all dataflow modes are scan-based
+and reverse-differentiable). `--skip-plan-warmup` turns both off. The
+shutdown routing line includes the executed-mode histogram and per-reason
+degrade counts from the schedule->mesh lowering (repro.core.lower).
 """
 from __future__ import annotations
 

@@ -98,5 +98,14 @@ def pmm(x: jax.Array, w: jax.Array, tag: str = "") -> jax.Array:
             ctx.stats.bucketed += 1
     if plan is None:
         ctx.stats.fallback += 1
-    return dit_gemm(x, w, ctx.mesh, mode="auto", row_axis=ctx.row_axis,
-                    col_axis=ctx.col_axis, plan=plan)
+        return dit_gemm(x, w, ctx.mesh, mode="auto", row_axis=ctx.row_axis,
+                        col_axis=ctx.col_axis)
+    # lower the tuned schedule here (not inside dit_gemm) so the resolved
+    # mode and any fallback reasons land in the context stats — launchers
+    # report WHY routing degraded, not just that it did
+    from repro.core.lower import lower_schedule
+    exec_plan = lower_schedule(getattr(plan, "schedule", plan), ctx.mesh,
+                               ctx.row_axis, ctx.col_axis, shape=shape)
+    ctx.stats.record_lowering(exec_plan)
+    return dit_gemm(x, w, ctx.mesh, row_axis=ctx.row_axis,
+                    col_axis=ctx.col_axis, exec_plan=exec_plan)

@@ -65,10 +65,26 @@ class GemmStats:
     unrouted: int = 0      # recorded but not routed (no mesh in the context)
     observed: Dict[Tuple[str, object], int] = dataclasses.field(
         default_factory=dict)
+    # schedule->mesh lowering outcomes (repro.core.lower.ExecPlan): which
+    # mode each plan-served matmul actually executed, and the
+    # machine-readable reason for every degradation along the way
+    modes: Dict[str, int] = dataclasses.field(default_factory=dict)
+    degrades: Dict[str, int] = dataclasses.field(default_factory=dict)
+    silent_degrades: int = 0   # auto executions with NO recorded reason
+    #                            (structurally 0: every ExecPlan fallback
+    #                            carries a reason; kept as the cross-check)
 
     def record(self, tag: str, shape) -> None:
         key = (tag, shape)
         self.observed[key] = self.observed.get(key, 0) + 1
+
+    def record_lowering(self, exec_plan) -> None:
+        """Count an ExecPlan's executed mode + its fallback-chain reasons."""
+        self.modes[exec_plan.mode] = self.modes.get(exec_plan.mode, 0) + 1
+        for fb in exec_plan.fallbacks:
+            self.degrades[fb.reason] = self.degrades.get(fb.reason, 0) + 1
+        if exec_plan.mode == "auto" and not exec_plan.fallbacks:
+            self.silent_degrades += 1
 
     @property
     def routed(self) -> int:
@@ -88,10 +104,16 @@ class GemmStats:
         return list(dict.fromkeys(shape for (_, shape) in self.observed))
 
     def describe(self) -> str:
-        return (f"pmm calls={self.routed + self.unrouted} routed={self.routed} "
-                f"(hits={self.hits} bucketed={self.bucketed} "
-                f"fallback={self.fallback}) unrouted={self.unrouted} "
-                f"plan-resolve-rate={self.resolve_rate:.0%}")
+        out = (f"pmm calls={self.routed + self.unrouted} routed={self.routed} "
+               f"(hits={self.hits} bucketed={self.bucketed} "
+               f"fallback={self.fallback}) unrouted={self.unrouted} "
+               f"plan-resolve-rate={self.resolve_rate:.0%}")
+        if self.modes:
+            out += f" modes={dict(sorted(self.modes.items()))}"
+        if self.degrades or self.silent_degrades:
+            out += (f" degrades={dict(sorted(self.degrades.items()))} "
+                    f"silent={self.silent_degrades}")
+        return out
 
 
 @dataclasses.dataclass

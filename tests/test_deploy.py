@@ -10,8 +10,8 @@ from types import SimpleNamespace
 import pytest
 
 from repro.core.autotuner import enumerate_candidates, tune, tune_cached
-from repro.core.gemm import mode_from_schedule
 from repro.core.layout import optimal_layout
+from repro.core.lower import lower_schedule
 from repro.core.remap import ClusterRemap
 from repro.core.schedule import GEMMShape, Schedule, Tiling, build_program
 from repro.deploy import (BucketingPolicy, DeploymentPlan, PlanCache, Planner,
@@ -292,23 +292,32 @@ def test_refine_async_executor():
 # dispatch + workload extraction
 # ---------------------------------------------------------------------------
 
-def test_mode_from_schedule_mapping():
+def test_lower_schedule_mapping():
+    """The deploy-facing contract of the schedule->mesh lowering: tuned
+    dataflows resolve to their mesh modes (tests/test_lowering.py covers the
+    full fallback-reason matrix)."""
     mesh_sq = SimpleNamespace(shape={"data": 2, "model": 2})
     mesh_rect = SimpleNamespace(shape={"data": 1, "model": 4})
 
-    def sched(df, owner="first"):
-        return Schedule(SHAPE, Tiling(4, 4, 1, tk=64), df,
+    def sched(df, owner="first", gk=1):
+        return Schedule(SHAPE, Tiling(4, 4, gk, tk=64), df,
                         reduce_owner=owner)
 
-    assert mode_from_schedule(sched("summa"), mesh_sq) == ("summa", {})
-    assert mode_from_schedule(sched("systolic"), mesh_sq)[0] == "cannon"
-    assert mode_from_schedule(sched("systolic"), mesh_rect)[0] == "summa"
-    assert mode_from_schedule(sched("baseline"), mesh_sq)[0] == "allgather"
-    mode, kw = mode_from_schedule(sched("splitk_summa", "round_robin"),
-                                  mesh_sq)
-    assert mode == "splitk" and kw["scatter"] is True
-    mode, kw = mode_from_schedule(sched("splitk_summa", "first"), mesh_sq)
-    assert kw["scatter"] is False
+    assert lower_schedule(sched("summa"), mesh_sq).mode == "summa"
+    assert lower_schedule(sched("systolic"), mesh_sq).mode == "cannon"
+    ep = lower_schedule(sched("systolic"), mesh_rect)
+    assert ep.mode == "summa" and "non_square_systolic" in ep.reasons()
+    assert lower_schedule(sched("baseline"), mesh_sq).mode == "allgather"
+    # the tuned 3-D grid survives: gk=2 factors out of the model axis
+    ep = lower_schedule(sched("splitk_summa", "round_robin", gk=2), mesh_sq)
+    assert ep.mode == "splitk_summa" and ep.kwargs["scatter"] is True
+    assert ep.axes["k"] == "splitk" and not ep.fallbacks
+    ep = lower_schedule(sched("splitk_summa", "first", gk=2), mesh_sq)
+    assert ep.kwargs["scatter"] is False
+    # a k-grid that factors into neither axis collapses to 1-D split-K,
+    # with the reason recorded
+    ep = lower_schedule(sched("splitk_summa", "round_robin", gk=3), mesh_sq)
+    assert ep.mode == "splitk" and "grid_mismatch" in ep.reasons()
 
 
 def test_model_workload_extraction():

@@ -1,0 +1,331 @@
+"""Schedule->mesh lowering (repro.core.lower) — the ExecPlan contract.
+
+Two halves:
+
+1. **Resolution + fallback reasons** (no devices): `lower_schedule` only
+   needs `mesh.shape`, so every branch of the lowering — each DATAFLOWS
+   name, each mesh-view construction, and each machine-readable fallback
+   reason — is pinned with bare namespace meshes.
+2. **Execution parity** (slow, subprocess with fake devices): every resolved
+   mode — including the nested 3-D `splitk_summa` and the `hierarchical`
+   outer-SUMMA-over-inner-Cannon mode — matches the `auto` baseline
+   numerically on 2x2 and 2x4 meshes, the tuned gk>1 grid executes true
+   3-D split-K on an 8-device mesh (the ROADMAP acceptance), and the new
+   modes are reverse-differentiable.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from types import SimpleNamespace
+
+import pytest
+
+from repro.core import lower
+from repro.core.lower import (ExecPlan, Fallback, MeshView, lower_schedule,
+                              lowering_summary)
+from repro.core.schedule import DATAFLOWS, GEMMShape, Schedule, Tiling
+
+
+def mesh2(dm, dn):
+    return SimpleNamespace(shape={"data": dm, "model": dn},
+                           axis_names=("data", "model"))
+
+
+def sched(df, m=64, n=64, k=128, gm=2, gn=2, gk=1, owner="first",
+          inner=(2, 2)):
+    return Schedule(GEMMShape(m, n, k), Tiling(gm, gn, gk, tk=32), df,
+                    reduce_owner=owner, inner=inner)
+
+
+# ---------------------------------------------------------------------------
+# every dataflow name has an explicit lowering
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("df", DATAFLOWS)
+@pytest.mark.parametrize("mesh", [mesh2(2, 2), mesh2(2, 4)],
+                         ids=["2x2", "2x4"])
+def test_every_dataflow_lowers(df, mesh):
+    """Regression for the silent default branch: every name in DATAFLOWS —
+    including both hierarchical compositions — resolves without error and
+    lands on a known mode."""
+    ep = lower_schedule(sched(df, gk=2 if df == "splitk_summa" else 1), mesh)
+    assert isinstance(ep, ExecPlan)
+    assert ep.mode in lower.EXEC_MODES
+    assert ep.requested == df
+    # hierarchical dataflows get the hierarchical mode, not a summa collapse
+    if df in ("systolic_over_summa", "summa_over_systolic"):
+        assert ep.mode == "hierarchical"
+        assert ep.axes["inner_row"] == "data_in"
+    if df == "splitk_summa":
+        assert ep.mode == "splitk_summa"
+
+
+def test_unknown_dataflow_reason():
+    ep = lower_schedule(sched("warp_drive"), mesh2(2, 2))
+    assert ep.mode == "summa"
+    assert ep.reasons() == (lower.UNKNOWN_DATAFLOW,)
+
+
+# ---------------------------------------------------------------------------
+# mesh-view construction: the tuned grid survives to execution
+# ---------------------------------------------------------------------------
+
+def test_splitk_view_factors_col_axis():
+    ep = lower_schedule(sched("splitk_summa", gk=2, owner="round_robin"),
+                        mesh2(2, 4))
+    assert ep.mode == "splitk_summa" and not ep.fallbacks
+    assert ep.kwargs["scatter"] is True
+    sizes = ep.view.axis_sizes(mesh2(2, 4))
+    assert sizes == {"data": 2, "model": 2, "splitk": 2}
+
+
+def test_splitk_view_factors_row_axis():
+    # gk does not divide the 1-wide column axis; it factors out of the rows
+    ep = lower_schedule(sched("splitk_summa", gk=2), mesh2(4, 1))
+    assert ep.mode == "splitk_summa" and not ep.fallbacks
+    assert ep.view.axis_sizes(mesh2(4, 1)) == {"data": 2, "splitk": 2,
+                                               "model": 1}
+
+
+def test_splitk_grid_mismatch_collapses_to_1d():
+    ep = lower_schedule(sched("splitk_summa", gk=3), mesh2(2, 4))
+    assert ep.mode == "splitk"
+    assert ep.reasons() == (lower.GRID_MISMATCH,)
+    assert ep.axes["k"] == "model" and ep.view is None
+    assert not ep.degraded          # 1-D split-K still honors the dataflow
+
+
+def test_splitk_gk_one_is_summa():
+    ep = lower_schedule(sched("splitk_summa", gk=1), mesh2(2, 2))
+    assert ep.mode == "summa"
+    assert ep.reasons() == (lower.GK_IS_ONE,)
+
+
+def test_hierarchical_view():
+    ep = lower_schedule(sched("summa_over_systolic", inner=(2, 2)),
+                        mesh2(2, 4))
+    assert ep.mode == "hierarchical" and not ep.fallbacks
+    assert ep.view.axis_sizes(mesh2(2, 4)) == {
+        "data": 1, "data_in": 2, "model": 2, "model_in": 2}
+    assert ep.kwargs["inner"] == (2, 2)
+
+
+def test_view_materialize_preserves_extra_axes():
+    """A multi-pod mesh's pod axis passes through the view untouched."""
+    view = MeshView(splits=(("model", (("model", 2), ("splitk", 2))),))
+    pod_mesh = SimpleNamespace(shape={"pod": 2, "data": 2, "model": 4},
+                               axis_names=("pod", "data", "model"))
+    assert view.axis_sizes(pod_mesh) == {"pod": 2, "data": 2, "model": 2,
+                                         "splitk": 2}
+
+
+# ---------------------------------------------------------------------------
+# fallback reasons, branch by branch
+# ---------------------------------------------------------------------------
+
+def test_non_square_systolic():
+    ep = lower_schedule(sched("systolic"), mesh2(2, 4))
+    assert ep.mode == "summa"
+    assert ep.reasons() == (lower.NON_SQUARE_SYSTOLIC,)
+    assert not ep.degraded
+
+
+def test_non_square_inner():
+    ep = lower_schedule(sched("summa_over_systolic", inner=(1, 2)),
+                        mesh2(2, 4))
+    assert ep.mode == "summa"
+    assert ep.reasons() == (lower.NON_SQUARE_INNER,)
+
+
+def test_inner_grid_mismatch():
+    ep = lower_schedule(sched("systolic_over_summa", inner=(3, 3)),
+                        mesh2(4, 4))
+    assert ep.mode == "summa"
+    assert ep.reasons() == (lower.INNER_GRID_MISMATCH,)
+
+
+@pytest.mark.parametrize("df,shape,reason", [
+    ("summa", (63, 64, 128), lower.M_NOT_DIVISIBLE),
+    ("summa", (64, 63, 128), lower.N_NOT_DIVISIBLE),
+    ("summa", (64, 64, 130), lower.K_NOT_DIVISIBLE),
+    ("systolic", (64, 64, 127), lower.K_NOT_DIVISIBLE),
+    ("baseline", (63, 64, 128), lower.M_NOT_DIVISIBLE),
+    ("baseline", (64, 64, 127), lower.K_NOT_DIVISIBLE),
+])
+def test_indivisible_degrades_to_auto(df, shape, reason):
+    m, n, k = shape
+    ep = lower_schedule(sched(df, m=m, n=n, k=k), mesh2(2, 2))
+    assert ep.mode == "auto" and ep.degraded
+    assert ep.fallbacks[-1] == Fallback(reason, ep.fallbacks[-1].from_mode,
+                                        "auto")
+
+
+def test_splitk_3d_k_indivisible_degrades_to_auto():
+    # gk=2 fits the mesh, but K=130 % (gk*rm*rn)=8 != 0
+    ep = lower_schedule(sched("splitk_summa", gk=2, k=130), mesh2(2, 4))
+    assert ep.mode == "auto"
+    assert ep.reasons() == (lower.K_NOT_DIVISIBLE,)
+
+
+def test_splitk_scatter_demotes_not_degrades():
+    # round_robin wants psum_scatter, but M=2 < rm*gk=4: the reduction
+    # demotes to the replicated-C psum ('first' analogue), mode unchanged
+    ep = lower_schedule(sched("splitk_summa", gk=2, m=2, owner="round_robin"),
+                        mesh2(2, 4))
+    assert ep.mode == "splitk_summa"
+    assert ep.kwargs["scatter"] is False
+    assert lower.SCATTER_M_INDIVISIBLE in ep.reasons()
+    assert not ep.degraded
+
+
+def test_splitk_1d_scatter_demotion():
+    # grid mismatch -> 1-D splitk over the 4-wide model axis; M=2 % 4 != 0
+    # demotes scatter there too (the old inline dit_gemm check, now in one
+    # place so dispatch and validation cannot drift)
+    ep = lower_schedule(sched("splitk_summa", gk=3, m=2, owner="round_robin"),
+                        mesh2(2, 4))
+    assert ep.mode == "splitk" and ep.kwargs["scatter"] is False
+    assert ep.reasons() == (lower.GRID_MISMATCH, lower.SCATTER_M_INDIVISIBLE)
+
+
+def test_fallback_chain_hierarchical_to_auto():
+    # inner group fits, but K % (Om*On*ih) fails -> hierarchical -> auto
+    ep = lower_schedule(sched("summa_over_systolic", inner=(2, 2), k=126),
+                        mesh2(2, 4))
+    assert ep.mode == "auto"
+    assert ep.reasons() == (lower.K_NOT_DIVISIBLE,)
+    assert ep.fallbacks[0].from_mode == "hierarchical"
+
+
+def test_overrides_validated_before_dispatch():
+    """Caller kwargs merge BEFORE legality: forcing scatter on an
+    M-indivisible problem is demoted, not crashed."""
+    ep = lower_schedule(sched("splitk_summa", gk=2, m=2, owner="first"),
+                        mesh2(2, 4), overrides={"scatter": True})
+    assert ep.kwargs["scatter"] is False
+    assert lower.SCATTER_M_INDIVISIBLE in ep.reasons()
+
+
+def test_shape_override_beats_schedule_shape():
+    """Bucketed serving dispatches neighbour shapes: legality must check the
+    actual operands, not the tuned shape."""
+    tuned = sched("summa", m=64, n=64, k=128)
+    ok = lower_schedule(tuned, mesh2(2, 2))
+    assert ok.mode == "summa"
+    served = lower_schedule(tuned, mesh2(2, 2), shape=(64, 64, 130))
+    assert served.mode == "auto"
+    assert lower.K_NOT_DIVISIBLE in served.reasons()
+
+
+def test_lowering_summary_counts():
+    mesh = mesh2(2, 4)
+    plans = [lower_schedule(sched("summa"), mesh),
+             lower_schedule(sched("systolic"), mesh),
+             lower_schedule(sched("summa", k=130), mesh)]
+    s = lowering_summary(plans)
+    assert s["modes"] == {"summa": 2, "auto": 1}
+    assert s["degrade_reasons"] == {lower.NON_SQUARE_SYSTOLIC: 1,
+                                    lower.K_NOT_DIVISIBLE: 1}
+    assert s["degraded"] == 1 and s["silent_auto_degrades"] == 0
+    assert s["total"] == 3
+
+
+def test_describe_is_informative():
+    ep = lower_schedule(sched("systolic"), mesh2(2, 4))
+    text = ep.describe()
+    assert "systolic" in text and "summa" in text
+    assert lower.NON_SQUARE_SYSTOLIC in text
+
+
+# ---------------------------------------------------------------------------
+# execution parity vs auto (multi-device subprocess)
+# ---------------------------------------------------------------------------
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+PARITY_BODY = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.gemm import dit_gemm
+    from repro.core.lower import lower_schedule
+    from repro.core.schedule import GEMMShape, Schedule, Tiling
+
+    rng = np.random.default_rng(0)
+    M, N, K = 64, 96, 128
+    a = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    ref = np.asarray(a @ b)
+
+    def run(mesh, sched):
+        ep = lower_schedule(sched, mesh, "data", "model", shape=(M, N, K))
+        out = np.asarray(jax.jit(
+            lambda x, y: dit_gemm(x, y, mesh, plan=sched))(a, b))
+        auto = np.asarray(jax.jit(
+            lambda x, y: dit_gemm(x, y, mesh, mode="auto"))(a, b))
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(out, auto, rtol=1e-4, atol=1e-4)
+        return ep
+
+    CASES = [
+        ("summa", dict()),
+        ("systolic", dict()),
+        ("baseline", dict()),
+        ("splitk_summa", dict(gk=2, owner="round_robin")),
+        ("splitk_summa", dict(gk=2, owner="first")),
+        ("splitk_summa", dict(gk=8, owner="round_robin")),  # 1-D collapse
+        ("systolic_over_summa", dict()),
+        ("summa_over_systolic", dict()),
+    ]
+    for mesh_shape in ((2, 2), (2, 4)):
+        mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+        for df, kw in CASES:
+            sched = Schedule(GEMMShape(M, N, K),
+                             Tiling(2, 2, kw.get("gk", 1), tk=32), df,
+                             reduce_owner=kw.get("owner", "first"),
+                             inner=(2, 2))
+            ep = run(mesh, sched)
+            assert not ep.degraded, (mesh_shape, df, ep.describe())
+            print("OK", mesh_shape, df, "->", ep.mode)
+
+    # ROADMAP acceptance: a tuned gk>1 schedule executes TRUE 3-D split-K
+    # on the 8-device mesh (not the 1-D collapse), matching auto
+    mesh8 = jax.make_mesh((2, 4), ("data", "model"))
+    s3d = Schedule(GEMMShape(M, N, K), Tiling(2, 2, 2, tk=32),
+                   "splitk_summa", reduce_owner="round_robin")
+    ep = lower_schedule(s3d, mesh8, "data", "model", shape=(M, N, K))
+    assert ep.mode == "splitk_summa" and not ep.fallbacks, ep.describe()
+    assert ep.view.axis_sizes(mesh8) == {"data": 2, "model": 2, "splitk": 2}
+    run(mesh8, s3d)
+    print("OK 3-D splitk on 8 devices")
+
+    # the new modes are reverse-differentiable (routed training)
+    ones = jnp.ones((M, N), jnp.float32)
+    for df, gk in (("splitk_summa", 2), ("summa_over_systolic", 1)):
+        sched = Schedule(GEMMShape(M, N, K), Tiling(2, 2, gk, tk=32), df,
+                         reduce_owner="round_robin", inner=(2, 2))
+        ga, gb = jax.grad(
+            lambda x, y, s=sched: dit_gemm(x, y, mesh8, plan=s).sum(),
+            argnums=(0, 1))(a, b)
+        np.testing.assert_allclose(np.asarray(ga), np.asarray(ones @ b.T),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(gb), np.asarray(a.T @ ones),
+                                   rtol=1e-4, atol=1e-4)
+        print("OK grad", df)
+    print("ALL_OK")
+""")
+
+
+@pytest.mark.slow
+def test_exec_parity_multidevice():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", PARITY_BODY], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, (f"stdout:\n{proc.stdout}\n"
+                                  f"stderr:\n{proc.stderr}")
+    assert "ALL_OK" in proc.stdout

@@ -35,14 +35,29 @@ MINI = AcceleratorConfig(name="mini", grid=(4, 4),
                          tile=TileConfig(l1_bytes=4 * 1024 * 1024),
                          noc=NoCConfig(), hbm=HBMConfig(n_channels=8))
 
-# one smoke arch per block kind the satellite names
+# one smoke arch per block kind the satellite names (vlm joins the matrix
+# now that model_workload models the modality-frontend projection)
 BLOCK_KINDS = {
     "gqa": "gemma-2b",
     "mla": "deepseek-v2-236b",
     "moe": "deepseek-moe-16b",
     "mamba2": "zamba2-1.2b",
     "xlstm": "xlstm-1.3b",
+    "vlm": "phi-3-vision-4.2b",
 }
+
+
+def _prefill_kwargs(cfg, batch: int, abstract: bool = True):
+    """Extra forward() inputs a modality-frontend arch needs (the VLM stub's
+    precomputed patch embeddings)."""
+    if getattr(cfg, "frontend", "none") != "vision_stub":
+        return {}
+    shape = (batch, cfg.n_prefix, cfg.d_model)
+    if abstract:
+        return {"prefix_embeds": jax.ShapeDtypeStruct(shape, jnp.bfloat16)}
+    rng = np.random.default_rng(9)
+    return {"prefix_embeds": jnp.asarray(rng.standard_normal(shape),
+                                         jnp.bfloat16)}
 
 
 # ---------------------------------------------------------------------------
@@ -95,10 +110,11 @@ def test_forward_parity_no_mesh(kind):
     rng = np.random.default_rng(3)
     params = init_params(jax.random.PRNGKey(0), cfg)
     toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)
-    base = forward(params, toks, cfg)
+    kwargs = _prefill_kwargs(cfg, 2, abstract=False)
+    base = forward(params, toks, cfg, **kwargs)
     ctx = GemmContext(mesh=None)
     with shard_ctx.gemm_context(ctx):
-        recorded = forward(params, toks, cfg)
+        recorded = forward(params, toks, cfg, **kwargs)
     assert jnp.array_equal(base, recorded)
     assert ctx.stats.observed, "forward traced no pmm calls"
 
@@ -171,12 +187,14 @@ def test_model_workload_cross_validation(kind):
     decoder-only block kinds; enc-dec/frontend are a documented gap)."""
     cfg = smoke_config(BLOCK_KINDS[kind])
     b, s = 2, 16
+    kwargs = _prefill_kwargs(cfg, b)
     ctx = GemmContext(mesh=None)
     with shard_ctx.gemm_context(ctx):
         pshapes = jax.eval_shape(
             lambda: init_params(jax.random.PRNGKey(0), cfg))
         toks = jax.ShapeDtypeStruct((b, s), jnp.int32)
-        jax.eval_shape(lambda p, t: forward(p, t, cfg), pshapes, toks)
+        jax.eval_shape(lambda p, t, **kws: forward(p, t, cfg, **kws),
+                       pshapes, toks, **kwargs)
     observed = ctx.stats.observed_shapes()
     predicted = model_workload(cfg, b, s, kind="prefill")
     cov = workload_coverage(predicted, observed)

@@ -1,18 +1,27 @@
 """Routing-path benchmark -> BENCH_routing.json (the perf trajectory of the
 schedule->mesh lowering layer).
 
-Three measurements on a model workload (smoke config, 8 fake CPU devices):
+Four measurements on a model workload (smoke config, 16 fake CPU devices):
 
 - **plan-resolve latency**: `Planner.plan_cached` per workload shape against
   a warmed cache (the trace-time dispatch cost every `pmm` callsite pays),
   plus `lower_schedule` per served plan (the ExecPlan resolution cost).
 - **per-mode trace+lower wall time**: `jax.jit(dit_gemm).lower()` for every
   executed mode — auto baseline, summa, cannon, 1-D/3-D split-K, both
-  reduction owners, hierarchical — the compile-side price of honoring the
-  tuned dataflow instead of letting XLA place collectives.
+  reduction owners, both hierarchical compositions — the compile-side price
+  of honoring the tuned dataflow instead of letting XLA place collectives.
 - **fallback rate**: fraction of the workload's tuned plans that degrade to
   `auto` when lowered onto the mesh, with per-reason counts and the
   silent-degrade cross-check (must be 0: every degrade carries a reason).
+- **per-mode execution efficiency vs XLA auto**: each executable mode
+  (summa, cannon, splitk_summa, hierarchical, outer_systolic) runs the same
+  GEMM set on a 4x4 host mesh, best-of-reps wall time against the `auto`
+  baseline; `efficiency_vs_auto > 1` means the tuned collective pattern
+  beat XLA's placement. This is the ground-truth signal the autotuner's
+  simulator-side perf reports are validated against (on fake CPU devices
+  the absolute numbers measure collective-schedule overhead, not real
+  fabric bandwidth — see docs/benchmarking.md for the methodology and what
+  a regression means).
 
 Standalone (sets its own fake-device count; run before importing jax
 elsewhere):
@@ -75,7 +84,9 @@ def _bench_modes(reps: int) -> dict:
     from repro.core.gemm import dit_gemm
     from repro.core.schedule import GEMMShape, Schedule, Tiling
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    # 4x4: square, so `systolic` traces cannon and `systolic_over_summa`
+    # traces the real outer_systolic mode instead of their fallbacks
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
     rng = np.random.default_rng(0)
     M, N, K = 256, 256, 512
     a = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
@@ -112,10 +123,89 @@ def _bench_modes(reps: int) -> dict:
     return out
 
 
+def _bench_efficiency(reps: int) -> dict:
+    """Per-mode execution wall time vs XLA auto on a 4x4 host mesh.
+
+    The 4x4 grid is the smallest square mesh on which EVERY executable mode
+    — including the Fig. 6c outer-systolic composition (2x2 outer ring of
+    2x2 inner groups) — lowers without fallback, so all modes run the same
+    GEMM set. Every schedule's lowering is asserted clean before timing: a
+    silent degrade would quietly benchmark `auto` against itself.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.gemm import dit_gemm
+    from repro.core.lower import lower_schedule
+    from repro.core.schedule import GEMMShape, Schedule, Tiling
+
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    gemms = [(256, 256, 512), (512, 256, 1024)]
+    # label -> (schedule dataflow, tiling/owner knobs); each must lower to
+    # exactly its label on the 4x4 mesh
+    mode_cases = [
+        ("summa", "summa", dict()),
+        ("cannon", "systolic", dict()),
+        ("splitk_summa", "splitk_summa", dict(gk=2, owner="round_robin")),
+        ("hierarchical", "summa_over_systolic", dict()),
+        ("outer_systolic", "systolic_over_summa", dict()),
+    ]
+    rng = np.random.default_rng(0)
+
+    def timed(fn, a, b) -> float:
+        jax.block_until_ready(fn(a, b))          # compile + warm
+        best = float("inf")
+        for _ in range(max(1, reps)):
+            t0 = time.perf_counter()
+            for _ in range(3):
+                out = fn(a, b)
+            jax.block_until_ready(out)
+            best = min(best, (time.perf_counter() - t0) / 3)
+        return best
+
+    auto_ms = []
+    modes = {label: {"ms": [], "efficiency_vs_auto": []}
+             for label, _, _ in mode_cases}
+    for (M, N, K) in gemms:
+        a = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+        t_auto = timed(jax.jit(
+            lambda x, y: dit_gemm(x, y, mesh, mode="auto")), a, b)
+        auto_ms.append(round(t_auto * 1e3, 3))
+        for label, df, kw in mode_cases:
+            sched = Schedule(GEMMShape(M, N, K),
+                             Tiling(4, 4, kw.get("gk", 1), tk=64), df,
+                             reduce_owner=kw.get("owner", "first"),
+                             inner=(2, 2))
+            ep = lower_schedule(sched, mesh, shape=(M, N, K))
+            if ep.mode != label or ep.degraded:
+                raise RuntimeError(f"{df} lowered to {ep.describe()}, "
+                                   f"expected clean {label}")
+            t = timed(jax.jit(
+                lambda x, y, s=sched: dit_gemm(x, y, mesh, plan=s)), a, b)
+            modes[label]["ms"].append(round(t * 1e3, 3))
+            modes[label]["efficiency_vs_auto"].append(round(t_auto / t, 3))
+    for rec in modes.values():
+        effs = rec["efficiency_vs_auto"]
+        rec["geomean"] = round(
+            float(np.exp(np.mean(np.log(np.asarray(effs))))), 3)
+    return {
+        "mesh": [4, 4],
+        "gemms": [list(g) for g in gemms],
+        "auto_ms": auto_ms,
+        "modes": modes,
+    }
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--reps", type=int, default=3,
-                    help="trace+lower repetitions per mode (best-of)")
+                    help="trace+lower / execution repetitions per mode "
+                         "(best-of)")
+    ap.add_argument("--skip-efficiency", action="store_true",
+                    help="skip the per-mode execution timing (keep only the "
+                         "trace-time measurements)")
     ap.add_argument("--out", default="BENCH_routing.json")
     args = ap.parse_args(argv)
 
@@ -128,9 +218,11 @@ def main(argv=None) -> dict:
             os.environ.get("XLA_FLAGS", ""):
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
-            + " --xla_force_host_platform_device_count=8").strip()
+            + " --xla_force_host_platform_device_count=16").strip()
     result = _bench()
     result["trace_lower_ms"] = _bench_modes(args.reps)
+    if not args.skip_efficiency:
+        result["efficiency_vs_auto"] = _bench_efficiency(args.reps)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)
 
@@ -143,6 +235,10 @@ def main(argv=None) -> dict:
           f"silent={wl['silent_auto_degrades']}")
     for label, ms in sorted(result["trace_lower_ms"].items()):
         print(f"routing.trace_lower.{label},{ms * 1e3:.1f},ms={ms}")
+    for label, rec in sorted(result.get("efficiency_vs_auto",
+                                        {}).get("modes", {}).items()):
+        print(f"routing.exec.{label},{rec['ms'][0] * 1e3:.1f},"
+              f"eff_vs_auto={rec['geomean']}")
     print(f"wrote {args.out}")
     return result
 

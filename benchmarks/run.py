@@ -3,7 +3,11 @@
 Prints ``name,us_per_call,derived`` CSV. Figures 7/9/10/11/12 run the DiT
 schedules through the SoftHier cost model on the paper's hardware instances;
 microbench covers the host-executable pieces. The roofline benchmark reads
-the dry-run artifacts if present (results/dryrun)."""
+the dry-run artifacts if present (results/dryrun). `routing_bench` also
+writes the BENCH_routing.json artifact (plan-resolve latency, per-mode
+trace+lower cost, per-mode execution efficiency vs XLA auto) — every
+BENCH_* artifact's schema, production command, and regression meaning is
+documented in docs/benchmarking.md."""
 from __future__ import annotations
 
 import sys

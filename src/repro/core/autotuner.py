@@ -48,7 +48,15 @@ def enumerate_candidates(shape: GEMMShape, hw: AcceleratorConfig,
                          dataflows: Optional[List[str]] = None,
                          elem_bytes: int = 1,
                          max_candidates: int = 256) -> Iterator[Schedule]:
-    """Legal schedule candidates, insight-ordered (most promising first)."""
+    """Legal schedule candidates, insight-ordered (most promising first).
+
+    The default dataflow set matches the paper's search space; passing
+    `dataflows` explicitly widens or narrows it — including the
+    hierarchical compositions (`systolic_over_summa` / `summa_over_systolic`,
+    enumerated with the paper's (2, 2) inner group), which restricted
+    searches (e.g. `dryrun --route-dataflows`) use to force Fig. 6c/6d
+    schedules into the plan cache.
+    """
     rows, cols = hw.grid
     n_tiles = rows * cols
     dataflows = dataflows or ["summa", "splitk_summa", "systolic", "baseline"]
@@ -92,11 +100,18 @@ def enumerate_candidates(shape: GEMMShape, hw: AcceleratorConfig,
                             if l1 > hw.tile.l1_bytes:
                                 continue
                         for df in dataflows:
-                            if df in ("summa", "systolic", "baseline") and gk != 1:
+                            if df != "splitk_summa" and gk != 1:
                                 continue
                             if df == "splitk_summa" and gk < 2:
                                 continue
                             if df == "systolic" and (gm == 1 or gn == 1):
+                                continue
+                            if df in ("systolic_over_summa",
+                                      "summa_over_systolic") \
+                                    and (gm % 2 or gn % 2):
+                                # hierarchical candidates use the paper's
+                                # square (2, 2) inner group, which must
+                                # divide the logical grid
                                 continue
                             # insight-based priority scoring (lower = better):
                             # predicted engine utilization = M/N alignment x
@@ -109,7 +124,10 @@ def enumerate_candidates(shape: GEMMShape, hw: AcceleratorConfig,
                             ceil_k = tk_eff / (tk_eff + fill)
                             score = -(_engine_friendly(tn, hw) * eff_m * ceil_k)
                             score *= {"summa": 1.0, "splitk_summa": 0.98,
-                                      "systolic": 0.9, "baseline": 0.1}[df]
+                                      "systolic": 0.9,
+                                      "systolic_over_summa": 0.92,
+                                      "summa_over_systolic": 0.9,
+                                      "baseline": 0.1}[df]
                             key = (gm, gn, gk, iter_m, iter_n, tk_eff, df,
                                    acc_bytes)
                             if key in seen:
@@ -118,7 +136,8 @@ def enumerate_candidates(shape: GEMMShape, hw: AcceleratorConfig,
                             cands.append((score, Schedule(
                                 shape=shape,
                                 tiling=Tiling(gm, gn, gk, iter_m, iter_n, tk_eff),
-                                dataflow=df, elem_bytes=elem_bytes,
+                                dataflow=df, inner=(2, 2),
+                                elem_bytes=elem_bytes,
                                 acc_bytes=acc_bytes)))
     cands.sort(key=lambda sc: sc[0])
     for _, sched in cands[:max_candidates]:

@@ -16,9 +16,16 @@ The logical grid is partitioned into an outer (Om x On) grid of inner
 All collectives here are single hardware mask collectives: inner rows/cols and
 outer-strided rows/cols fix aligned power-of-2 bit-ranges of the flat index.
 
-Mesh-execution analogue: `dit_gemm` mode `hierarchical` — both compositions
-lower (via `repro.core.lower.lower_schedule`) to outer SUMMA over inner
-Cannon groups on a 4-axis mesh view (docs/dataflows.md).
+Mesh-execution analogue: each composition lowers (via
+`repro.core.lower.lower_schedule`) to its OWN `dit_gemm` mode on a 4-axis
+mesh view — `summa_over_systolic` (Fig. 6d) to `hierarchical` (outer SUMMA
+over inner Cannon groups) and `systolic_over_summa` (Fig. 6c) to
+`outer_systolic` (an outer Cannon ring of inner SUMMA groups; the
+group-to-group hold propagation below becomes `ppermute` ring steps over
+the outer mesh axes). Fig. 6c needs a square outer grid of at least 2×2
+for its ring and falls back to `hierarchical` otherwise, with the reason
+recorded — see docs/dataflows.md ("Fig. 6c vs 6d") for the side-by-side
+collective patterns and fallback chains.
 """
 from __future__ import annotations
 

@@ -18,10 +18,15 @@ become `jax.lax` collectives inside `shard_map`:
   over a (row × col) sub-grid on their K slice, then the partials NoC-reduce
   over a dedicated k sub-axis of the mesh — the tuned (gm × gn × gk) logical
   grid mapped onto a mesh view instead of collapsing to 1-D split-K.
-- **hierarchical** (Fig. 6c/6d analogue): outer SUMMA over inner Cannon
-  groups — each physical axis splits into (outer, inner) per
+- **hierarchical** (Fig. 6d, SUMMA over systolic): outer SUMMA over inner
+  Cannon groups — each physical axis splits into (outer, inner) per
   `Schedule.inner`; owner groups psum-broadcast outer K-panels along the
   outer axes while each inner group contracts its panel systolically.
+- **outer_systolic** (Fig. 6c, systolic over SUMMA): the dual composition —
+  an outer Cannon ring of inner SUMMA groups. A/B chunks propagate between
+  whole tile groups as a global wavefront (`ppermute` ring steps over the
+  outer axes, wavefront skew by outer grid index) while each inner group
+  runs the shared `_summa_acc` body on its subproblem.
 - **allgather** (beyond-paper baseline): gather all panels once, single local
   GEMM. Highest memory, fewest collectives — XLA's default TP pattern.
 - **auto**: sharding-constrained einsum; XLA chooses the collective schedule.
@@ -51,7 +56,8 @@ from jax.experimental.shard_map import shard_map
 from repro.core.lower import ExecPlan, lower_schedule
 
 # modes dispatchable by name; the plan-only modes (splitk_summa,
-# hierarchical) additionally need a mesh view — see lower.EXEC_MODES.
+# hierarchical, outer_systolic) additionally need a mesh view — see
+# lower.EXEC_MODES.
 MODES = ("auto", "summa", "cannon", "splitk", "allgather")
 
 
@@ -258,10 +264,11 @@ def hierarchical_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
                       inner_row: str = "data_in",
                       inner_col: str = "model_in") -> jax.Array:
     """Hierarchical dataflow on an (outer_row × inner_row × outer_col ×
-    inner_col) mesh view — the mesh analogue of the paper's Fig. 6c/6d
-    compositions: the outer (Om × On) grid of inner (ih × ih) groups runs
-    SUMMA at the group level while each group contracts its K-panel with
-    Cannon's wavefront.
+    inner_col) mesh view — the mesh analogue of the paper's Fig. 6d
+    (SUMMA over systolic): the outer (Om × On) grid of inner (ih × ih)
+    groups runs SUMMA at the group level while each group contracts its
+    K-panel with Cannon's wavefront. Fig. 6c's dual composition is
+    `outer_systolic_gemm` below.
 
     Per outer panel p (of Om*On): the owner outer-column psum-broadcasts the
     A panel along `col_axis`, the owner outer-row the B panel along
@@ -308,6 +315,82 @@ def hierarchical_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
 
         acc = jnp.zeros((a_loc.shape[0], b_loc.shape[1]), dtype=jnp.float32)
         acc, _ = jax.lax.scan(outer_step, acc, jnp.arange(panels))
+        return acc.astype(a_loc.dtype)
+
+    spec = P((row_axis, inner_row), (col_axis, inner_col))
+    return shard_map(body, mesh=mesh, in_specs=(spec, spec), out_specs=spec,
+                     check_rep=False)(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Outer-systolic: outer Cannon ring of inner SUMMA groups (Fig. 6c)
+# ---------------------------------------------------------------------------
+
+def outer_systolic_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
+                        row_axis: str = "data", col_axis: str = "model",
+                        inner_row: str = "data_in",
+                        inner_col: str = "model_in") -> jax.Array:
+    """Fig. 6c's systolic-over-SUMMA composition on an (outer_row ×
+    inner_row × outer_col × inner_col) mesh view: Cannon's wavefront runs at
+    the *group* level while each inner (ih × ih) group contracts its current
+    K-chunk with SUMMA.
+
+    K splits into D = Om (== On) outer chunks, one per group column. After
+    the initial group-level skew (A group-block (oi, oj) → (oi, oj − oi);
+    B → (oi − oj, oj)), every outer step contracts the held chunk through
+    the shared `_summa_acc` body inside the group, then rotates the whole
+    A chunk one group west and the B chunk one group north — each rotation
+    is a single `ppermute` ring step over an *outer* axis, so A/B chunks
+    propagate between tile groups as a global wavefront (the paper's
+    group-to-group P2P of the hold buffers) with no broadcast at the outer
+    level at all.
+
+    Needs a square outer grid (the ring) and square inner groups (the inner
+    SUMMA panel algebra): `lower_schedule` falls back to `hierarchical`
+    otherwise, with the reason recorded.
+    """
+    om, ih = _axis_size(mesh, row_axis), _axis_size(mesh, inner_row)
+    on, iw = _axis_size(mesh, col_axis), _axis_size(mesh, inner_col)
+    if ih != iw:
+        raise ValueError(f"outer_systolic needs square inner groups, "
+                         f"got {ih}x{iw}")
+    if om != on:
+        raise ValueError(f"outer_systolic needs a square outer grid, "
+                         f"got {om}x{on}")
+    m, k = a.shape
+    if k % (om * ih * ih):
+        raise ValueError(f"K={k} must divide by Om*ih^2={om * ih * ih}")
+    d = om
+
+    def body(a_loc, b_loc):
+        oi = jax.lax.axis_index(row_axis)
+        oj = jax.lax.axis_index(col_axis)
+        ring = [(s, (s - 1) % d) for s in range(d)]
+
+        # group-level skew: like `_cannon_acc`'s, but masked by the OUTER
+        # grid index — every device in outer row oi applies oi ring hops
+        def skew_a(val, s):
+            shifted = jax.lax.ppermute(val, col_axis, ring)
+            return jnp.where(oi > s, shifted, val), None
+
+        def skew_b(val, s):
+            shifted = jax.lax.ppermute(val, row_axis, ring)
+            return jnp.where(oj > s, shifted, val), None
+
+        a_cur, _ = jax.lax.scan(skew_a, a_loc, jnp.arange(d - 1))
+        b_cur, _ = jax.lax.scan(skew_b, b_loc, jnp.arange(d - 1))
+
+        def outer_step(carry, _):
+            a_cur, b_cur, acc = carry
+            acc = acc + _summa_acc(a_cur, b_cur, inner_row, inner_col,
+                                   ih, ih)
+            a_cur = jax.lax.ppermute(a_cur, col_axis, ring)   # chunk west
+            b_cur = jax.lax.ppermute(b_cur, row_axis, ring)   # chunk north
+            return (a_cur, b_cur, acc), None
+
+        acc = jnp.zeros((a_loc.shape[0], b_loc.shape[1]), dtype=jnp.float32)
+        (_, _, acc), _ = jax.lax.scan(outer_step, (a_cur, b_cur, acc), None,
+                                      length=d)
         return acc.astype(a_loc.dtype)
 
     spec = P((row_axis, inner_row), (col_axis, inner_col))
@@ -373,6 +456,9 @@ def exec_plan_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
     if mode == "hierarchical":
         return hierarchical_gemm(a, b, emesh, ax["row"], ax["col"],
                                  ax["inner_row"], ax["inner_col"])
+    if mode == "outer_systolic":
+        return outer_systolic_gemm(a, b, emesh, ax["row"], ax["col"],
+                                   ax["inner_row"], ax["inner_col"])
     raise KeyError(f"ExecPlan resolved to unknown mode {mode!r}")
 
 

@@ -12,9 +12,14 @@ Three layers of resolution:
 1. **Dataflow mapping** — each of the six `DATAFLOWS` has an explicit
    lowering (no silent default branch): `summa` → `summa`, `systolic` →
    `cannon`, `baseline` → `allgather`, `splitk_summa` → the 3-D
-   `splitk_summa` mode, and both hierarchical dataflows → the `hierarchical`
-   mode (outer SUMMA over inner Cannon groups — the first mesh analogue of
-   Fig. 6c/6d; the two compositions share it).
+   `splitk_summa` mode, and the two hierarchical compositions resolve to
+   *distinct* modes: `summa_over_systolic` (Fig. 6d) → `hierarchical`
+   (outer SUMMA over inner Cannon groups) and `systolic_over_summa`
+   (Fig. 6c) → `outer_systolic` (an outer Cannon ring of inner SUMMA
+   groups — A/B chunks propagate between tile groups as a global
+   wavefront over `ppermute` rings). Fig. 6c needs a square outer grid of
+   at least 2×2 for its ring; otherwise it falls back to `hierarchical`
+   with the reason recorded (`non_square_outer` / `outer_ring_too_small`).
 2. **Mesh-view construction** — when a schedule needs more grid axes than
    the physical mesh exposes, `MeshView` describes sub-axis splits of the
    physical axes: a gk>1 split-K schedule factors gk out of the row or
@@ -46,8 +51,10 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 # -- machine-readable fallback reasons --------------------------------------
 # mode changes
 NON_SQUARE_SYSTOLIC = "non_square_systolic"   # cannon needs dm == dn -> summa
-NON_SQUARE_INNER = "non_square_inner"         # inner cannon group not square -> summa
+NON_SQUARE_INNER = "non_square_inner"         # inner group not square -> summa
 INNER_GRID_MISMATCH = "inner_grid_mismatch"   # inner group doesn't divide the mesh -> summa
+NON_SQUARE_OUTER = "non_square_outer"         # Fig. 6c ring needs Om == On -> hierarchical
+OUTER_RING_TOO_SMALL = "outer_ring_too_small"  # Om < 2: no ring to rotate -> hierarchical
 GRID_MISMATCH = "grid_mismatch"               # gk factors into neither mesh axis -> 1-D splitk
 GK_IS_ONE = "gk_is_one"                       # splitk_summa with gk == 1 IS 2-D summa
 UNKNOWN_DATAFLOW = "unknown_dataflow"         # unrecognized name -> summa (paper default)
@@ -58,13 +65,14 @@ K_NOT_DIVISIBLE = "k_not_divisible"           # -> auto
 SCATTER_M_INDIVISIBLE = "scatter_m_indivisible"  # psum_scatter -> psum
 
 REASONS = (NON_SQUARE_SYSTOLIC, NON_SQUARE_INNER, INNER_GRID_MISMATCH,
-           GRID_MISMATCH, GK_IS_ONE, UNKNOWN_DATAFLOW, M_NOT_DIVISIBLE,
-           N_NOT_DIVISIBLE, K_NOT_DIVISIBLE, SCATTER_M_INDIVISIBLE)
+           NON_SQUARE_OUTER, OUTER_RING_TOO_SMALL, GRID_MISMATCH, GK_IS_ONE,
+           UNKNOWN_DATAFLOW, M_NOT_DIVISIBLE, N_NOT_DIVISIBLE,
+           K_NOT_DIVISIBLE, SCATTER_M_INDIVISIBLE)
 
 # modes an ExecPlan can resolve to (superset of gemm.MODES: the 3-D split-K
-# and hierarchical modes need a mesh view, so they are plan-only)
+# and both hierarchical modes need a mesh view, so they are plan-only)
 EXEC_MODES = ("auto", "summa", "cannon", "splitk", "splitk_summa",
-              "hierarchical", "allgather")
+              "hierarchical", "outer_systolic", "allgather")
 
 # sub-axis names introduced by mesh views
 K_AXIS = "splitk"
@@ -208,15 +216,32 @@ def lower_schedule(schedule, mesh, row_axis: str = "data",
         else:
             mode = "cannon"
     elif df in ("systolic_over_summa", "summa_over_systolic"):
+        # the two compositions resolve to DISTINCT modes: Fig. 6d
+        # (summa_over_systolic) -> hierarchical (outer SUMMA over inner
+        # Cannon groups); Fig. 6c (systolic_over_summa) -> outer_systolic
+        # (outer Cannon ring of inner SUMMA groups)
         ih, iw = getattr(schedule, "inner", (2, 2))
+        want = "outer_systolic" if df == "systolic_over_summa" \
+            else "hierarchical"
         if ih != iw:
-            fall(NON_SQUARE_INNER, "hierarchical", "summa")
+            fall(NON_SQUARE_INNER, want, "summa")
             mode = "summa"
         elif dm % ih or dn % iw:
-            fall(INNER_GRID_MISMATCH, "hierarchical", "summa")
+            fall(INNER_GRID_MISMATCH, want, "summa")
             mode = "summa"
         else:
-            mode = "hierarchical"
+            mode = want
+            om, on = dm // ih, dn // iw
+            if mode == "outer_systolic" and om != on:
+                # the Fig. 6c wavefront rotates A/B chunks around outer
+                # ppermute rings, which needs a square outer grid; the
+                # outer-SUMMA composition handles rectangular grids
+                fall(NON_SQUARE_OUTER, "outer_systolic", "hierarchical")
+                mode = "hierarchical"
+            elif mode == "outer_systolic" and om < 2:
+                # a single outer group has no ring to rotate chunks around
+                fall(OUTER_RING_TOO_SMALL, "outer_systolic", "hierarchical")
+                mode = "hierarchical"
             irow, icol = row_axis + INNER_SUFFIX, col_axis + INNER_SUFFIX
             view = MeshView(splits=(
                 (row_axis, ((row_axis, dm // ih), (irow, ih))),
@@ -293,14 +318,18 @@ def lower_schedule(schedule, mesh, row_axis: str = "data",
         elif kwargs.get("scatter") and m % (rm * gk):
             fall(SCATTER_M_INDIVISIBLE, "splitk_summa", "splitk_summa")
             kwargs["scatter"] = False
-    elif mode == "hierarchical":
+    elif mode in ("hierarchical", "outer_systolic"):
         ih = kwargs["inner"][0]
         om, on = dm // ih, dn // ih
+        # hierarchical: Om*On outer SUMMA panels, each split into ih Cannon
+        # chunks. outer_systolic: Om outer ring chunks (Om == On), each
+        # contracted by an ih*ih-panel inner SUMMA.
+        kdiv = om * ih * ih if mode == "outer_systolic" else om * on * ih
         if m % dm:
             reason = M_NOT_DIVISIBLE
         elif n % dn:
             reason = N_NOT_DIVISIBLE
-        elif k % (om * on * ih):
+        elif k % kdiv:
             reason = K_NOT_DIVISIBLE
     if reason is not None:
         fall(reason, mode, "auto")

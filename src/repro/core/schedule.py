@@ -78,6 +78,11 @@ class Tiling:
             raise ValueError(f"K_local={k_local} not divisible by tk={self.tk}")
 
 
+# every name has both a BSP builder (build_program, simulator/cost model)
+# and an explicit mesh lowering (repro.core.lower) — the two hierarchical
+# compositions resolve to distinct ExecPlan modes (systolic_over_summa ->
+# outer_systolic, summa_over_systolic -> hierarchical); docs/dataflows.md
+# tabulates the full mapping and its fallback chains.
 DATAFLOWS = ("baseline", "summa", "systolic", "systolic_over_summa",
              "summa_over_systolic", "splitk_summa")
 

@@ -157,12 +157,23 @@ class Planner:
     # -- batch warming ------------------------------------------------------
 
     def batch_tune(self, shapes: Sequence[GEMMShape],
-                   allow_bucketed: bool = False
+                   allow_bucketed: bool = False,
+                   skip_illegal: bool = False
                    ) -> Dict[GEMMShape, DeploymentPlan]:
-        """Tune a whole workload's (deduplicated) shapes into the cache."""
+        """Tune a whole workload's (deduplicated) shapes into the cache.
+
+        `skip_illegal` swallows per-shape "no legal schedule" errors —
+        a dataflow-restricted planner (e.g. a Fig. 6c-only search) may have
+        shapes with no legal candidate at all; those stay unplanned and the
+        dispatch path counts them as fallbacks instead of aborting the warm.
+        """
         out: Dict[GEMMShape, DeploymentPlan] = {}
         for shape in dict.fromkeys(shapes):
-            out[shape] = self.plan(shape, allow_bucketed=allow_bucketed)
+            try:
+                out[shape] = self.plan(shape, allow_bucketed=allow_bucketed)
+            except RuntimeError:
+                if not skip_illegal:
+                    raise
         return out
 
     # -- background refinement ---------------------------------------------

@@ -26,12 +26,19 @@ def add_plan_args(ap) -> None:
     ap.add_argument("--skip-plan-warmup", action="store_true")
 
 
-def build_planner(cache_dir: str, grid, max_candidates: int) -> Planner:
-    """A Planner on the pod-view accelerator with a persistent cache."""
+def build_planner(cache_dir: str, grid, max_candidates: int,
+                  dataflows=None) -> Planner:
+    """A Planner on the pod-view accelerator with a persistent cache.
+
+    `dataflows` restricts the candidate search (the restricted plans live
+    under their own cache variant) — `dryrun --route-dataflows` uses it to
+    force e.g. Fig. 6c schedules into the cache for the routed proof.
+    """
     from repro.hw.config import tpu_pod_as_accelerator
     return Planner(tpu_pod_as_accelerator(tuple(grid)),
                    cache=PlanCache(cache_dir),
-                   max_candidates=max_candidates)
+                   max_candidates=max_candidates,
+                   dataflows=dataflows)
 
 
 def warm_buckets(planner: Planner,
@@ -41,7 +48,7 @@ def warm_buckets(planner: Planner,
     t0 = time.time()
     buckets = list(dict.fromkeys(bucket_of(s, planner.policy)
                                  for s in workload))
-    planner.batch_tune(buckets)
+    planner.batch_tune(buckets, skip_illegal=planner.dataflows is not None)
     print(f"plan cache: {len(dict.fromkeys(workload))} workload shapes -> "
           f"{len(buckets)} buckets warmed in {time.time()-t0:.2f}s on "
           f"{planner.hw.name} ({planner.cache.stats.describe()})",

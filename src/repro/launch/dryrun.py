@@ -26,6 +26,9 @@ ON — every model matmul dispatches through its tuned dataflow's shard_map
 collectives on the 16x16 production mesh and the JSON reports per-reason
 lowering fallbacks (the ROADMAP routed-compile proof; pair with
 --skip-accounting to keep the measurement to the one routed compile).
+--route-dataflows restricts the warm-up's candidate search, e.g.
+`--route-dataflows systolic_over_summa` proves the Fig. 6c outer-systolic
+mode executes on the production mesh (see docs/dataflows.md).
 """
 import argparse
 import dataclasses
@@ -205,7 +208,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              skip_accounting: bool = False,
              plan_cache: str = "",
              plan_grid=(4, 4),
-             route: bool = False) -> Dict[str, Any]:
+             route: bool = False,
+             route_dataflows=None) -> Dict[str, Any]:
     cfg = get_config(arch)
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
@@ -223,14 +227,16 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         # (the ROADMAP "16x16 routed compile proof"), with per-reason
         # fallback counts in the JSON — no silent auto degrades.
         from repro.deploy.warmup import build_planner, warm_buckets
-        planner = build_planner(plan_cache, plan_grid, max_candidates=12)
+        planner = build_planner(plan_cache, plan_grid, max_candidates=12,
+                                dataflows=route_dataflows)
         if route:
             from repro.deploy import model_workload
             specs0 = input_specs(cfg, shape_name)
             workload = model_workload(cfg, specs0["batch"], specs0["seq"],
                                       kind=specs0["kind"], dp=_dp_size(mesh))
             warm_buckets(planner, workload)
-            planner.batch_tune(workload, allow_bucketed=True)
+            planner.batch_tune(workload, allow_bucketed=True,
+                               skip_illegal=route_dataflows is not None)
             gemm_ctx = shard_ctx.GemmContext(mesh=mesh, planner=planner)
         else:
             gemm_ctx = shard_ctx.GemmContext(mesh=None, planner=planner)
@@ -369,10 +375,20 @@ def main():
                          "on the production mesh (requires --plan-cache); "
                          "the JSON gains a 'routing' section with "
                          "per-reason fallback counts")
+    ap.add_argument("--route-dataflows", nargs="+", default=None,
+                    metavar="DF",
+                    help="restrict the warm-up's candidate search to these "
+                         "schedule dataflows (e.g. systolic_over_summa to "
+                         "prove the Fig. 6c outer-systolic mode on the "
+                         "production mesh); shapes with no legal restricted "
+                         "schedule stay unplanned and dispatch as auto "
+                         "fallbacks")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
     if args.route and not args.plan_cache:
         ap.error("--route requires --plan-cache")
+    if args.route_dataflows and not args.route:
+        ap.error("--route-dataflows requires --route")
 
     os.makedirs(args.out, exist_ok=True)
     tag = f"{args.arch}__{args.shape}__{'mp' if args.multi_pod else 'sp'}"
@@ -384,7 +400,8 @@ def main():
                           skip_accounting=args.skip_accounting,
                           plan_cache=args.plan_cache,
                           plan_grid=args.plan_grid,
-                          route=args.route)
+                          route=args.route,
+                          route_dataflows=args.route_dataflows)
         result["status"] = "ok"
     except Exception as e:
         result = {"arch": args.arch, "shape": args.shape,

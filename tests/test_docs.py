@@ -1,0 +1,79 @@
+"""Docs-drift guard: the documentation tree cannot silently rot.
+
+PR 3 left `core/dataflow/hierarchical.py` and `core/lower.py` claiming both
+hierarchical compositions lower to one mode after the lowering layer moved
+on — the kind of drift only a reader notices. These checks make the
+load-bearing doc invariants mechanical:
+
+- every `DATAFLOWS` name, every `EXEC_MODES` mode, and every machine-
+  readable `Fallback` reason string appears in docs/dataflows.md (the
+  lowering reference a degrade report sends you to);
+- every relative link in README.md and docs/*.md resolves to a real file.
+
+Device-free (string checks only), so CI's fast subset runs them.
+"""
+import os
+import re
+
+import pytest
+
+from repro.core import lower
+from repro.core.schedule import DATAFLOWS
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+DATAFLOWS_MD = os.path.join(ROOT, "docs", "dataflows.md")
+
+
+def _read(path: str) -> str:
+    with open(path, encoding="utf-8") as f:
+        return f.read()
+
+
+@pytest.mark.parametrize("name", DATAFLOWS)
+def test_every_dataflow_documented(name):
+    assert name in _read(DATAFLOWS_MD), (
+        f"schedule dataflow {name!r} is missing from docs/dataflows.md — "
+        f"document its lowering before shipping it")
+
+
+@pytest.mark.parametrize("mode", lower.EXEC_MODES)
+def test_every_exec_mode_documented(mode):
+    assert mode in _read(DATAFLOWS_MD), (
+        f"ExecPlan mode {mode!r} is missing from docs/dataflows.md — "
+        f"add it to the mode table")
+
+
+@pytest.mark.parametrize("reason", lower.REASONS)
+def test_every_fallback_reason_documented(reason):
+    assert reason in _read(DATAFLOWS_MD), (
+        f"fallback reason {reason!r} is missing from docs/dataflows.md — "
+        f"a degrade report would point users at a doc that never mentions "
+        f"it")
+
+
+def _markdown_files():
+    files = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    files += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                    if f.endswith(".md"))
+    return files
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+@pytest.mark.parametrize("md", _markdown_files(),
+                         ids=[os.path.relpath(f, ROOT).replace(os.sep, "/")
+                              for f in _markdown_files()])
+def test_relative_links_resolve(md):
+    broken = []
+    for target in _LINK.findall(_read(md)):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(md), path))
+        if not os.path.exists(resolved):
+            broken.append(target)
+    assert not broken, (f"{os.path.relpath(md, ROOT)} has broken relative "
+                        f"links: {broken}")

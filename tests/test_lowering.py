@@ -5,13 +5,19 @@ Two halves:
 1. **Resolution + fallback reasons** (no devices): `lower_schedule` only
    needs `mesh.shape`, so every branch of the lowering — each DATAFLOWS
    name, each mesh-view construction, and each machine-readable fallback
-   reason — is pinned with bare namespace meshes.
+   reason — is pinned with bare namespace meshes. The two hierarchical
+   compositions resolve to DISTINCT modes (Fig. 6d -> `hierarchical`,
+   Fig. 6c -> `outer_systolic`), with the Fig. 6c ring legality
+   (square outer grid of >= 2) pinned branch by branch.
 2. **Execution parity** (slow, subprocess with fake devices): every resolved
-   mode — including the nested 3-D `splitk_summa` and the `hierarchical`
-   outer-SUMMA-over-inner-Cannon mode — matches the `auto` baseline
-   numerically on 2x2 and 2x4 meshes, the tuned gk>1 grid executes true
-   3-D split-K on an 8-device mesh (the ROADMAP acceptance), and the new
-   modes are reverse-differentiable.
+   mode — including the nested 3-D `splitk_summa`, the `hierarchical`
+   outer-SUMMA-over-inner-Cannon mode, and the `outer_systolic` outer
+   Cannon ring of inner SUMMA groups — matches the `auto` baseline
+   numerically on 2x2 / 2x4 / 4x4 meshes, the tuned gk>1 grid executes
+   true 3-D split-K on an 8-device mesh (the ROADMAP acceptance), and the
+   new modes are reverse-differentiable. A separate subprocess proves a
+   Fig. 6c-tuned schedule reaches `outer_systolic` through the `pmm`
+   routed-dispatch path.
 """
 import os
 import subprocess
@@ -43,8 +49,8 @@ def sched(df, m=64, n=64, k=128, gm=2, gn=2, gk=1, owner="first",
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("df", DATAFLOWS)
-@pytest.mark.parametrize("mesh", [mesh2(2, 2), mesh2(2, 4)],
-                         ids=["2x2", "2x4"])
+@pytest.mark.parametrize("mesh", [mesh2(2, 2), mesh2(2, 4), mesh2(4, 4)],
+                         ids=["2x2", "2x4", "4x4"])
 def test_every_dataflow_lowers(df, mesh):
     """Regression for the silent default branch: every name in DATAFLOWS —
     including both hierarchical compositions — resolves without error and
@@ -53,9 +59,17 @@ def test_every_dataflow_lowers(df, mesh):
     assert isinstance(ep, ExecPlan)
     assert ep.mode in lower.EXEC_MODES
     assert ep.requested == df
-    # hierarchical dataflows get the hierarchical mode, not a summa collapse
-    if df in ("systolic_over_summa", "summa_over_systolic"):
+    # the Fig. 6d composition gets the hierarchical mode, never a summa
+    # collapse; Fig. 6c gets outer_systolic where the outer ring fits
+    # (square outer grid >= 2, i.e. the 4x4 mesh) and hierarchical elsewhere
+    if df == "summa_over_systolic":
         assert ep.mode == "hierarchical"
+        assert ep.axes["inner_row"] == "data_in"
+    if df == "systolic_over_summa":
+        dm, dn = mesh.shape["data"], mesh.shape["model"]
+        want = "outer_systolic" if (dm == dn and dm // 2 >= 2) \
+            else "hierarchical"
+        assert ep.mode == want
         assert ep.axes["inner_row"] == "data_in"
     if df == "splitk_summa":
         assert ep.mode == "splitk_summa"
@@ -111,6 +125,28 @@ def test_hierarchical_view():
     assert ep.kwargs["inner"] == (2, 2)
 
 
+def test_outer_systolic_view():
+    """Fig. 6c resolves to its own mode on a square outer grid — same
+    4-axis view as hierarchical, distinct collective program."""
+    ep = lower_schedule(sched("systolic_over_summa", inner=(2, 2)),
+                        mesh2(4, 4))
+    assert ep.mode == "outer_systolic" and not ep.fallbacks
+    assert ep.view.axis_sizes(mesh2(4, 4)) == {
+        "data": 2, "data_in": 2, "model": 2, "model_in": 2}
+    assert ep.kwargs["inner"] == (2, 2)
+    assert ep.axes["inner_row"] == "data_in"
+    assert ep.axes["inner_col"] == "model_in"
+
+
+def test_outer_systolic_production_mesh():
+    """The 16x16 production grid: an 8x8 outer ring of 2x2 SUMMA groups."""
+    ep = lower_schedule(sched("systolic_over_summa", m=256, n=256, k=2048),
+                        mesh2(16, 16))
+    assert ep.mode == "outer_systolic" and not ep.fallbacks
+    assert ep.view.axis_sizes(mesh2(16, 16)) == {
+        "data": 8, "data_in": 2, "model": 8, "model_in": 2}
+
+
 def test_view_materialize_preserves_extra_axes():
     """A multi-pod mesh's pod axis passes through the view untouched."""
     view = MeshView(splits=(("model", (("model", 2), ("splitk", 2))),))
@@ -143,6 +179,47 @@ def test_inner_grid_mismatch():
                         mesh2(4, 4))
     assert ep.mode == "summa"
     assert ep.reasons() == (lower.INNER_GRID_MISMATCH,)
+
+
+def test_non_square_outer_falls_to_hierarchical():
+    """Fig. 6c's ring needs a square outer grid; a rectangular one still
+    executes the hierarchical (Fig. 6d-shaped) composition, not summa."""
+    ep = lower_schedule(sched("systolic_over_summa", inner=(2, 2)),
+                        mesh2(4, 8))
+    assert ep.mode == "hierarchical"
+    assert ep.reasons() == (lower.NON_SQUARE_OUTER,)
+    assert ep.fallbacks[0].from_mode == "outer_systolic"
+    assert not ep.degraded
+    # the 4-axis view survives the fallback — hierarchical runs on it
+    assert ep.view.axis_sizes(mesh2(4, 8)) == {
+        "data": 2, "data_in": 2, "model": 4, "model_in": 2}
+
+
+def test_outer_ring_too_small_falls_to_hierarchical():
+    """A 1x1 outer grid has no ring to rotate chunks around."""
+    ep = lower_schedule(sched("systolic_over_summa", inner=(2, 2)),
+                        mesh2(2, 2))
+    assert ep.mode == "hierarchical"
+    assert ep.reasons() == (lower.OUTER_RING_TOO_SMALL,)
+    assert not ep.degraded
+
+
+def test_outer_systolic_k_indivisible_degrades_to_auto():
+    # the ring fits (2x2 outer of 2x2 inner), but K=132 % (Om*ih^2)=8 != 0
+    ep = lower_schedule(sched("systolic_over_summa", k=132), mesh2(4, 4))
+    assert ep.mode == "auto" and ep.degraded
+    assert ep.reasons() == (lower.K_NOT_DIVISIBLE,)
+    assert ep.fallbacks[0].from_mode == "outer_systolic"
+
+
+def test_outer_systolic_non_square_inner_reports_wanted_mode():
+    """A non-square inner group on the Fig. 6c composition records the
+    fallback as coming FROM outer_systolic (what the schedule asked for)."""
+    ep = lower_schedule(sched("systolic_over_summa", inner=(1, 2)),
+                        mesh2(4, 4))
+    assert ep.mode == "summa"
+    assert ep.reasons() == (lower.NON_SQUARE_INNER,)
+    assert ep.fallbacks[0].from_mode == "outer_systolic"
 
 
 @pytest.mark.parametrize("df,shape,reason", [
@@ -246,7 +323,7 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 PARITY_BODY = textwrap.dedent("""
     import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -280,7 +357,7 @@ PARITY_BODY = textwrap.dedent("""
         ("systolic_over_summa", dict()),
         ("summa_over_systolic", dict()),
     ]
-    for mesh_shape in ((2, 2), (2, 4)):
+    for mesh_shape in ((2, 2), (2, 4), (4, 4)):
         mesh = jax.make_mesh(mesh_shape, ("data", "model"))
         for df, kw in CASES:
             sched = Schedule(GEMMShape(M, N, K),
@@ -289,6 +366,9 @@ PARITY_BODY = textwrap.dedent("""
                              inner=(2, 2))
             ep = run(mesh, sched)
             assert not ep.degraded, (mesh_shape, df, ep.describe())
+            # Fig. 6c runs its OWN mode where the outer ring fits
+            if df == "systolic_over_summa" and mesh_shape == (4, 4):
+                assert ep.mode == "outer_systolic", ep.describe()
             print("OK", mesh_shape, df, "->", ep.mode)
 
     # ROADMAP acceptance: a tuned gk>1 schedule executes TRUE 3-D split-K
@@ -302,19 +382,35 @@ PARITY_BODY = textwrap.dedent("""
     run(mesh8, s3d)
     print("OK 3-D splitk on 8 devices")
 
+    # outer-systolic with degenerate (1, 1) inner groups IS outer Cannon:
+    # the smallest mesh that exercises the group-level ring (2x2 outer)
+    mesh4 = jax.make_mesh((2, 2), ("data", "model"))
+    s6c_min = Schedule(GEMMShape(M, N, K), Tiling(2, 2, 1, tk=32),
+                       "systolic_over_summa", inner=(1, 1))
+    ep = lower_schedule(s6c_min, mesh4, "data", "model", shape=(M, N, K))
+    assert ep.mode == "outer_systolic" and not ep.fallbacks, ep.describe()
+    run(mesh4, s6c_min)
+    print("OK outer_systolic (1x1 inner) on 2x2")
+
     # the new modes are reverse-differentiable (routed training)
     ones = jnp.ones((M, N), jnp.float32)
-    for df, gk in (("splitk_summa", 2), ("summa_over_systolic", 1)):
+    mesh16 = jax.make_mesh((4, 4), ("data", "model"))
+    for df, gk, mesh in (("splitk_summa", 2, mesh8),
+                         ("summa_over_systolic", 1, mesh8),
+                         ("systolic_over_summa", 1, mesh16),
+                         ("systolic_over_summa", 1, mesh4)):
         sched = Schedule(GEMMShape(M, N, K), Tiling(2, 2, gk, tk=32), df,
-                         reduce_owner="round_robin", inner=(2, 2))
+                         reduce_owner="round_robin",
+                         inner=(1, 1) if mesh is mesh4 else (2, 2))
+        ep = lower_schedule(sched, mesh, "data", "model", shape=(M, N, K))
         ga, gb = jax.grad(
-            lambda x, y, s=sched: dit_gemm(x, y, mesh8, plan=s).sum(),
+            lambda x, y, s=sched, m=mesh: dit_gemm(x, y, m, plan=s).sum(),
             argnums=(0, 1))(a, b)
         np.testing.assert_allclose(np.asarray(ga), np.asarray(ones @ b.T),
                                    rtol=1e-4, atol=1e-4)
         np.testing.assert_allclose(np.asarray(gb), np.asarray(a.T @ ones),
                                    rtol=1e-4, atol=1e-4)
-        print("OK grad", df)
+        print("OK grad", df, "->", ep.mode)
     print("ALL_OK")
 """)
 
@@ -325,6 +421,62 @@ def test_exec_parity_multidevice():
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     env.pop("XLA_FLAGS", None)
     proc = subprocess.run([sys.executable, "-c", PARITY_BODY], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, (f"stdout:\n{proc.stdout}\n"
+                                  f"stderr:\n{proc.stderr}")
+    assert "ALL_OK" in proc.stdout
+
+
+ROUTED_6C_BODY = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.schedule import GEMMShape
+    from repro.deploy import Planner
+    from repro.hw.config import tpu_pod_as_accelerator
+    from repro.models import shard_ctx
+    from repro.models.matmul import pmm
+    from repro.models.shard_ctx import GemmContext
+
+    # a REAL Fig. 6c tune: the restricted search must enumerate and price
+    # systolic_over_summa candidates (autotuner hierarchical enumeration)
+    planner = Planner(tpu_pod_as_accelerator((4, 4)), elem_bytes=4,
+                      max_candidates=12, dataflows=["systolic_over_summa"])
+    shape = GEMMShape(256, 256, 512)
+    plans = planner.batch_tune([shape])
+    assert plans[shape].schedule.dataflow == "systolic_over_summa"
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 128, 512)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((512, 256)), jnp.float32)
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    ctx = GemmContext(mesh=mesh, planner=planner)
+    with shard_ctx.gemm_context(ctx):
+        routed = jax.jit(lambda x, w: pmm(x, w, tag="fig6c"))(x, w)
+
+    # the tuned composition survives pmm -> lower_schedule -> dit_gemm:
+    # the stats record the executed mode, with no degrade of any kind
+    assert ctx.stats.hits == 1, ctx.stats.describe()
+    assert ctx.stats.modes == {"outer_systolic": 1}, ctx.stats.describe()
+    assert not ctx.stats.degrades and ctx.stats.silent_degrades == 0
+    np.testing.assert_allclose(np.asarray(routed), np.asarray(x @ w),
+                               rtol=1e-3, atol=1e-3)
+    print("stats:", ctx.stats.describe())
+    print("ALL_OK")
+""")
+
+
+@pytest.mark.slow
+def test_fig6c_tuned_schedule_routes_to_outer_systolic():
+    """End to end: a schedule tuned under the Fig. 6c restriction reaches
+    the `outer_systolic` mode through the pmm routed-dispatch path, and the
+    context stats record it (the mode histogram launchers report)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", ROUTED_6C_BODY], env=env,
                           capture_output=True, text=True, timeout=600)
     assert proc.returncode == 0, (f"stdout:\n{proc.stdout}\n"
                                   f"stderr:\n{proc.stderr}")

@@ -1,0 +1,152 @@
+"""Calibration benchmark -> BENCH_calibration.json (how well the SoftHier
+cost model tracks this machine, and whether trusting the fitted calibration
+would have picked better schedules).
+
+Uses the shared per-mode execution machinery in `sim/calibrate.py` (the
+same `MODE_CASES` table and timing discipline the routing benchmark's
+efficiency harness consumes): every executable mode (summa, cannon,
+splitk_summa, hierarchical, outer_systolic) runs the same GEMM grid on a
+4x4 host mesh (lowering asserted clean before timing), producing the
+(analytical PerfReport, measured wall time) pairs
+`sim.calibrate.fit_profile` consumes. The artifact records:
+
+- **fit quality**: the fitted `CalibrationProfile` (per-resource scale
+  factors + per-superstep overhead), R^2, geomean measured/predicted ratio,
+  and the `fit_ok` trust bit;
+- **per-mode ratios**: measured / analytical-predicted and measured /
+  calibrated-predicted per (mode, GEMM) — the dispersion of the first
+  column is the mispricing calibration exists to absorb;
+- **rank agreement**: how often the analytical argmin / the calibrated
+  argmin matched the measured-best mode per GEMM;
+- **picks**: measured-time geomean of the schedules the calibrated cost
+  model picks vs the analytical picks. The calibrated ranking is only used
+  when `fit_ok` (exactly like the autotuner), so this ratio is <= 1 by the
+  trust-gate's construction — CI asserts it;
+- **default_space**: the DEFAULT tuner dataflow set under this profile —
+  both hierarchical compositions join it iff `fit_ok`.
+
+Standalone (sets its own fake-device count; run before importing jax
+elsewhere):
+
+  PYTHONPATH=src python benchmarks/calibration_bench.py --reps 2
+
+Also exposed to benchmarks/run.py via a subprocess `run()` so the device
+count does not leak into the other benchmarks' jax runtime.
+"""
+import argparse
+import json
+import os
+from typing import List
+
+
+def _bench(reps: int) -> dict:
+    from repro.core.autotuner import default_dataflows
+    from repro.hw.config import tpu_pod_as_accelerator
+    from repro.sim import calibrate as cal
+
+    hw = tpu_pod_as_accelerator((4, 4))
+    profile, samples = cal.calibrate_mesh(hw, reps=reps)
+
+    modes: dict = {}
+    for s in samples:
+        rec = modes.setdefault(s.mode, {
+            "predicted_s": [], "measured_s": [],
+            "measured_over_predicted": [], "measured_over_calibrated": []})
+        pred, calp = s.report.total_time, profile.predict(s.report)
+        rec["predicted_s"].append(pred)
+        rec["measured_s"].append(s.measured_s)
+        rec["measured_over_predicted"].append(round(s.measured_s / pred, 3))
+        rec["measured_over_calibrated"].append(
+            round(s.measured_s / calp, 3) if calp > 0 else None)
+
+    # per-GEMM picks: the analytical argmin vs the argmin of the cost the
+    # tuner would actually use — BOTH computed by the same rank_stats the
+    # trust gate itself uses (ranking_cost applies the fit_ok gate exactly
+    # like `repro.core.autotuner.tune`), so the CI bar below cannot drift
+    # from fit_profile's own picks_measured_ratio statistic
+    agree_b, geo_b, shapes_n = cal.rank_stats(
+        samples, lambda rep: rep.total_time)
+    agree_a, geo_a, _ = cal.rank_stats(samples, cal.ranking_cost(profile))
+
+    return {
+        "mesh": list(hw.grid),
+        "gemms": [list(g) for g in cal.DEFAULT_GEMM_GRID],
+        "samples": len(samples),
+        "fit": profile.to_dict(),
+        "fit_ok": profile.fit_ok,
+        "modes": modes,
+        "rank_agreement": {
+            "shapes": shapes_n,
+            "analytical": round(agree_b, 3),
+            "calibrated": round(agree_a, 3),
+        },
+        "picks": {
+            "analytical_measured_geomean_s": geo_b,
+            "calibrated_measured_geomean_s": geo_a,
+            "measured_geomean_ratio": round(geo_a / geo_b, 4) if geo_b else 1.0,
+        },
+        "default_space": {
+            "dataflows": default_dataflows(profile),
+            "hierarchical_enumerated": profile.fit_ok,
+        },
+    }
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reps", type=int, default=2,
+                    help="execution repetitions per (mode, GEMM) (best-of)")
+    ap.add_argument("--out", default="BENCH_calibration.json")
+    args = ap.parse_args(argv)
+
+    # must precede the first jax import; appended rather than set so a
+    # pre-existing XLA_FLAGS keeps its settings (same pattern as
+    # routing_bench — see there for why this lives in main, not module top)
+    if "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=16").strip()
+    result = _bench(args.reps)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+
+    fit = result["fit"]
+    print(f"calibration.fit,{result['samples']},r2={fit['r2']:.3f} "
+          f"fit_ok={result['fit_ok']} "
+          f"scales=({fit['compute_scale']:.3g},{fit['dma_scale']:.3g},"
+          f"{fit['noc_scale']:.3g}) step={fit['step_overhead_s']:.3g}")
+    ra = result["rank_agreement"]
+    print(f"calibration.rank_agreement,{ra['shapes']},"
+          f"analytical={ra['analytical']} calibrated={ra['calibrated']}")
+    pk = result["picks"]
+    print(f"calibration.picks,{pk['calibrated_measured_geomean_s']*1e6:.1f},"
+          f"ratio_vs_analytical={pk['measured_geomean_ratio']}")
+    for mode, rec in sorted(result["modes"].items()):
+        print(f"calibration.mode.{mode},{rec['measured_s'][0]*1e6:.1f},"
+              f"meas_over_pred={rec['measured_over_predicted'][0]}")
+    print(f"wrote {args.out}")
+    return result
+
+
+def run() -> List[str]:
+    """benchmarks/run.py hook: subprocess so the fake-device XLA flag never
+    leaks into the shared jax runtime of the other benchmarks."""
+    import subprocess
+    import sys
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--reps", "1",
+         "--out", os.devnull],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ, "PYTHONPATH":
+             os.pathsep.join(filter(None, [
+                 os.path.join(os.path.dirname(__file__), "..", "src"),
+                 os.environ.get("PYTHONPATH", "")]))})
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-500:])
+    return [l for l in proc.stdout.splitlines()
+            if l.startswith("calibration.")]
+
+
+if __name__ == "__main__":
+    main()

@@ -138,52 +138,34 @@ def _bench_efficiency(reps: int) -> dict:
 
     from repro.core.gemm import dit_gemm
     from repro.core.lower import lower_schedule
-    from repro.core.schedule import GEMMShape, Schedule, Tiling
+    # the mode-case table, schedule construction, and timing discipline are
+    # shared with the calibration harness (sim/calibrate.measure_modes) so
+    # a new executable mode lands in both measured surfaces together
+    from repro.sim.calibrate import (MODE_CASES, build_mode_schedule,
+                                     time_best_of)
 
     mesh = jax.make_mesh((4, 4), ("data", "model"))
     gemms = [(256, 256, 512), (512, 256, 1024)]
-    # label -> (schedule dataflow, tiling/owner knobs); each must lower to
-    # exactly its label on the 4x4 mesh
-    mode_cases = [
-        ("summa", "summa", dict()),
-        ("cannon", "systolic", dict()),
-        ("splitk_summa", "splitk_summa", dict(gk=2, owner="round_robin")),
-        ("hierarchical", "summa_over_systolic", dict()),
-        ("outer_systolic", "systolic_over_summa", dict()),
-    ]
     rng = np.random.default_rng(0)
-
-    def timed(fn, a, b) -> float:
-        jax.block_until_ready(fn(a, b))          # compile + warm
-        best = float("inf")
-        for _ in range(max(1, reps)):
-            t0 = time.perf_counter()
-            for _ in range(3):
-                out = fn(a, b)
-            jax.block_until_ready(out)
-            best = min(best, (time.perf_counter() - t0) / 3)
-        return best
 
     auto_ms = []
     modes = {label: {"ms": [], "efficiency_vs_auto": []}
-             for label, _, _ in mode_cases}
+             for label, _, _ in MODE_CASES}
     for (M, N, K) in gemms:
         a = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
         b = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
-        t_auto = timed(jax.jit(
-            lambda x, y: dit_gemm(x, y, mesh, mode="auto")), a, b)
+        t_auto = time_best_of(jax.jit(
+            lambda x, y: dit_gemm(x, y, mesh, mode="auto")), a, b, reps)
         auto_ms.append(round(t_auto * 1e3, 3))
-        for label, df, kw in mode_cases:
-            sched = Schedule(GEMMShape(M, N, K),
-                             Tiling(4, 4, kw.get("gk", 1), tk=64), df,
-                             reduce_owner=kw.get("owner", "first"),
-                             inner=(2, 2))
+        for label, df, kw in MODE_CASES:
+            sched = build_mode_schedule(df, kw, 4, 4, (M, N, K))
             ep = lower_schedule(sched, mesh, shape=(M, N, K))
             if ep.mode != label or ep.degraded:
                 raise RuntimeError(f"{df} lowered to {ep.describe()}, "
                                    f"expected clean {label}")
-            t = timed(jax.jit(
-                lambda x, y, s=sched: dit_gemm(x, y, mesh, plan=s)), a, b)
+            t = time_best_of(jax.jit(
+                lambda x, y, s=sched: dit_gemm(x, y, mesh, plan=s)), a, b,
+                reps)
             modes[label]["ms"].append(round(t * 1e3, 3))
             modes[label]["efficiency_vs_auto"].append(round(t_auto / t, 3))
     for rec in modes.values():

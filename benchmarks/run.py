@@ -5,8 +5,10 @@ schedules through the SoftHier cost model on the paper's hardware instances;
 microbench covers the host-executable pieces. The roofline benchmark reads
 the dry-run artifacts if present (results/dryrun). `routing_bench` also
 writes the BENCH_routing.json artifact (plan-resolve latency, per-mode
-trace+lower cost, per-mode execution efficiency vs XLA auto) — every
-BENCH_* artifact's schema, production command, and regression meaning is
+trace+lower cost, per-mode execution efficiency vs XLA auto) and
+`calibration_bench` writes BENCH_calibration.json (cost-model fit quality,
+rank agreement, calibrated-vs-analytical pick quality) — every BENCH_*
+artifact's schema, production command, and regression meaning is
 documented in docs/benchmarking.md."""
 from __future__ import annotations
 
@@ -16,8 +18,9 @@ import traceback
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import (fig7_case_study, fig9_11_gh200, fig12_portability,
-                            microbench, plan_bench, routing_bench)
+    from benchmarks import (calibration_bench, fig7_case_study, fig9_11_gh200,
+                            fig12_portability, microbench, plan_bench,
+                            routing_bench)
     modules = [
         ("fig7", fig7_case_study),
         ("fig9-11", fig9_11_gh200),
@@ -25,6 +28,7 @@ def main() -> None:
         ("micro", microbench),
         ("plan", plan_bench),
         ("routing", routing_bench),
+        ("calibration", calibration_bench),
     ]
     try:
         from benchmarks import roofline_table

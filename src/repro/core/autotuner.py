@@ -18,7 +18,25 @@ from typing import Iterator, List, Optional, Tuple
 
 from repro.core.schedule import GEMMShape, Schedule, Tiling, build_program
 from repro.hw.config import AcceleratorConfig
+from repro.sim.calibrate import is_trusted as _trusted
+from repro.sim.calibrate import ranking_cost
 from repro.sim.perf import PerfReport, estimate
+
+# The paper's search space (§4.1.4). The hierarchical compositions join it
+# ONLY under a trusted (fit_ok) measured calibration — their simulated win
+# must be backed by the machine before the default search may pick them
+# (ROADMAP: "enumerate the hierarchical compositions in the DEFAULT tuner
+# search space once the cost model is validated against measurements").
+DEFAULT_DATAFLOWS = ("summa", "splitk_summa", "systolic", "baseline")
+CALIBRATED_DATAFLOWS = ("systolic_over_summa", "summa_over_systolic")
+
+
+def default_dataflows(calibration=None) -> List[str]:
+    """The DEFAULT search space, widened by a trusted calibration profile."""
+    out = list(DEFAULT_DATAFLOWS)
+    if _trusted(calibration):
+        out += list(CALIBRATED_DATAFLOWS)
+    return out
 
 
 @dataclasses.dataclass
@@ -26,7 +44,13 @@ class TunedResult:
     schedule: Schedule
     report: PerfReport
     candidates_tried: int
-    log: List[Tuple[str, float, float]]  # (describe, time, utilization)
+    # (describe, ranking_cost, utilization) per candidate tried — the cost
+    # is the calibrated prediction when a trusted profile ranked the
+    # search, NOT always analytical seconds (check `calibration` below).
+    log: List[Tuple[str, float, float]]
+    # digest of the trusted CalibrationProfile that ranked the candidates
+    # ("" = ranked by the raw analytical prior).
+    calibration: str = ""
 
 
 def _pow2_range(lo: int, hi: int) -> List[int]:
@@ -47,7 +71,8 @@ def _engine_friendly(tn: int, hw: AcceleratorConfig) -> float:
 def enumerate_candidates(shape: GEMMShape, hw: AcceleratorConfig,
                          dataflows: Optional[List[str]] = None,
                          elem_bytes: int = 1,
-                         max_candidates: int = 256) -> Iterator[Schedule]:
+                         max_candidates: int = 256,
+                         calibration=None) -> Iterator[Schedule]:
     """Legal schedule candidates, insight-ordered (most promising first).
 
     The default dataflow set matches the paper's search space; passing
@@ -55,11 +80,13 @@ def enumerate_candidates(shape: GEMMShape, hw: AcceleratorConfig,
     hierarchical compositions (`systolic_over_summa` / `summa_over_systolic`,
     enumerated with the paper's (2, 2) inner group), which restricted
     searches (e.g. `dryrun --route-dataflows`) use to force Fig. 6c/6d
-    schedules into the plan cache.
+    schedules into the plan cache. A trusted (fit_ok) `calibration` profile
+    widens the DEFAULT set with both hierarchical compositions — measured
+    validation is the admission ticket.
     """
     rows, cols = hw.grid
     n_tiles = rows * cols
-    dataflows = dataflows or ["summa", "splitk_summa", "systolic", "baseline"]
+    dataflows = dataflows or default_dataflows(calibration)
 
     cands: List[Tuple[float, Schedule]] = []
     # the tk >= k_local clamp makes distinct tk values collapse onto the same
@@ -148,13 +175,25 @@ def tune(shape: GEMMShape, hw: AcceleratorConfig,
          dataflows: Optional[List[str]] = None,
          elem_bytes: int = 1,
          max_candidates: int = 48,
-         store_stage_options: Tuple[int, ...] = (1, 4)) -> TunedResult:
-    """Build + price candidates; return the fastest schedule."""
+         store_stage_options: Tuple[int, ...] = (1, 4),
+         calibration=None) -> TunedResult:
+    """Build + price candidates; return the fastest schedule.
+
+    With a trusted `calibration` profile, candidates are ranked by the
+    calibrated cost (`profile.predict` over the analytical report) — the
+    measured per-resource scale factors decide the winner, not the raw
+    prior. The winning plan's report stays analytical (the fleet-wide
+    comparable number); the ranking provenance is in
+    `TunedResult.calibration`.
+    """
+    trusted = _trusted(calibration)
+    cost = ranking_cost(calibration)
     best: Optional[Tuple[float, Schedule, PerfReport]] = None
     log: List[Tuple[str, float, float]] = []
     tried = 0
     for base in enumerate_candidates(shape, hw, dataflows, elem_bytes,
-                                     max_candidates=max_candidates):
+                                     max_candidates=max_candidates,
+                                     calibration=calibration):
         for stages in store_stage_options:
             sched = dataclasses.replace(base, store_stages=stages)
             try:
@@ -163,13 +202,14 @@ def tune(shape: GEMMShape, hw: AcceleratorConfig,
                 continue
             rep = estimate(prog, hw)
             tried += 1
-            log.append((sched.describe(), rep.total_time, rep.utilization(hw)))
-            if best is None or rep.total_time < best[0]:
-                best = (rep.total_time, sched, rep)
+            log.append((sched.describe(), cost(rep), rep.utilization(hw)))
+            if best is None or cost(rep) < best[0]:
+                best = (cost(rep), sched, rep)
     if best is None:
         raise RuntimeError(f"no legal schedule found for {shape} on {hw.name}")
     return TunedResult(schedule=best[1], report=best[2],
-                       candidates_tried=tried, log=log)
+                       candidates_tried=tried, log=log,
+                       calibration=calibration.digest() if trusted else "")
 
 
 def tune_cached(shape: GEMMShape, hw: AcceleratorConfig,
@@ -184,25 +224,32 @@ def tune_cached(shape: GEMMShape, hw: AcceleratorConfig,
     A `dataflows` restriction keys its plans under a separate cache variant,
     so constrained searches never collide with (or clobber) the unrestricted
     winners. Other knobs (max_candidates, store_stage_options) affect search
-    effort, not validity, so a hit tuned under different effort is served.
+    effort, not validity, so a hit tuned under different effort is served —
+    but a hit ranked under a different calibration regime (see
+    `repro.deploy.Planner._admissible`) is NOT: it gets re-tuned and
+    replaced, so a trusted profile never becomes a silent no-op against a
+    previously warmed cache.
     """
-    from repro.deploy.plan import (plan_from_tuning,   # deploy imports us
-                                   search_variant)
+    from repro.deploy.plan import (plan_admissible,   # deploy imports us
+                                   plan_from_tuning, search_variant)
 
     elem_bytes = tune_kwargs.get("elem_bytes", 1)
     # [] means 'unrestricted' to enumerate_candidates; keep the cache
     # variant and the admissibility check consistent with that.
     dataflows = tune_kwargs.get("dataflows") or None
+    calibration = tune_kwargs.get("calibration")
+    regime = calibration.digest() if _trusted(calibration) else ""
     variant = search_variant(dataflows)
     plan = cache.get(shape, elem_bytes, hw, variant)
-    if plan is not None and dataflows is not None \
-            and plan.schedule.dataflow not in dataflows:
-        plan = None                                   # defensive (shared dir)
+    if plan is not None and not plan_admissible(plan, dataflows, regime):
+        plan = None      # wrong dataflow space or calibration regime
     if plan is not None:
         return TunedResult(schedule=plan.schedule, report=plan.report,
-                           candidates_tried=0, log=[])
+                           candidates_tried=0, log=[],
+                           calibration=plan.calibration_digest)
     res = tune(shape, hw, **tune_kwargs)
     cache.put(plan_from_tuning(shape, hw, res.schedule, res.report,
                                candidates_tried=res.candidates_tried,
-                               variant=variant))
+                               variant=variant,
+                               calibration_digest=res.calibration))
     return res

@@ -118,6 +118,10 @@ class DeploymentPlan:
     # Part of the cache key: a dataflow-restricted search must not collide
     # with (or clobber) the unrestricted winner for the same shape.
     variant: str = ""
+    # digest of the trusted CalibrationProfile that ranked the candidate
+    # search ("" = ranked by the analytical prior). Provenance, not a cache
+    # key: a calibrated re-tune intentionally replaces the prior's winner.
+    calibration_digest: str = ""
 
     @property
     def shape(self) -> GEMMShape:
@@ -135,6 +139,7 @@ class DeploymentPlan:
             "source": self.source,
             "candidates_tried": self.candidates_tried,
             "variant": self.variant,
+            "calibration_digest": self.calibration_digest,
             "schedule": schedule_to_dict(self.schedule),
             "report": self.report.to_dict(),
         }
@@ -157,6 +162,7 @@ class DeploymentPlan:
             candidates_tried=d.get("candidates_tried", 0),
             schema_version=version,
             variant=d.get("variant", ""),
+            calibration_digest=d.get("calibration_digest", ""),
         )
 
     @classmethod
@@ -177,11 +183,26 @@ def plan_from_tuning(shape: GEMMShape, hw: AcceleratorConfig,
                      schedule: Schedule, report: PerfReport,
                      candidates_tried: int = 0,
                      source: str = SOURCE_TUNED,
-                     variant: str = "") -> DeploymentPlan:
+                     variant: str = "",
+                     calibration_digest: str = "") -> DeploymentPlan:
     assert schedule.shape == shape
     return DeploymentPlan(schedule=schedule, report=report, hw_name=hw.name,
                           hw_digest=hw_fingerprint(hw), source=source,
-                          candidates_tried=candidates_tried, variant=variant)
+                          candidates_tried=candidates_tried, variant=variant,
+                          calibration_digest=calibration_digest)
+
+
+def plan_admissible(plan: DeploymentPlan, dataflows,
+                    calibration_digest: str) -> bool:
+    """THE cache-hit admissibility rule, shared by `deploy.Planner` and
+    `core.autotuner.tune_cached` so the two entry points cannot disagree:
+    a plan outside the caller's dataflow space (hand-edited cache dir), or
+    ranked under a different calibration regime (analytical plans after a
+    trusted profile landed, or vice versa), is a miss — it gets re-tuned
+    and replaced, never silently served."""
+    if dataflows is not None and plan.schedule.dataflow not in dataflows:
+        return False
+    return plan.calibration_digest == calibration_digest
 
 
 def search_variant(dataflows) -> str:

@@ -30,8 +30,8 @@ from repro.sim.perf import estimate
 from repro.deploy.bucketing import BucketingPolicy, transfer_candidates, adapt
 from repro.deploy.cache import PlanCache
 from repro.deploy.plan import (DeploymentPlan, SOURCE_BUCKETED, SOURCE_TUNED,
-                               hw_fingerprint, plan_from_tuning,
-                               search_variant)
+                               hw_fingerprint, plan_admissible,
+                               plan_from_tuning, search_variant)
 
 
 class Planner:
@@ -42,7 +42,8 @@ class Planner:
                  dataflows: Optional[List[str]] = None,
                  store_stage_options: Tuple[int, ...] = (1, 4),
                  policy: BucketingPolicy = BucketingPolicy(),
-                 on_plan: Optional[Callable[[DeploymentPlan], None]] = None):
+                 on_plan: Optional[Callable[[DeploymentPlan], None]] = None,
+                 calibration=None):
         self.hw = hw
         self.cache = cache if cache is not None else PlanCache()
         self.elem_bytes = (elem_bytes if elem_bytes is not None
@@ -54,6 +55,27 @@ class Planner:
         self.store_stage_options = store_stage_options
         self.policy = policy
         self.on_plan = on_plan
+        # measured-calibration profile (sim/calibrate.CalibrationProfile):
+        # every tune this planner runs ranks candidates by the calibrated
+        # cost, and a trusted profile widens the DEFAULT search space. A
+        # profile fitted for different hardware is refused outright — a
+        # mis-keyed profile must not silently re-rank another machine.
+        if calibration is not None \
+                and calibration.hw_digest != hw_fingerprint(hw):
+            raise ValueError(
+                f"calibration profile {calibration.describe()} was fitted "
+                f"for hw digest {calibration.hw_digest}, not "
+                f"{hw_fingerprint(hw)} ({hw.name})")
+        self.calibration = calibration
+        # the ranking regime this planner serves plans under: a trusted
+        # profile's digest, else "" (analytical prior — an UNTRUSTED profile
+        # changes nothing, so it shares the prior's regime). Cached plans
+        # ranked under a different regime are re-tuned, not served: without
+        # this, a warmed cache dir would make a later calibration a silent
+        # no-op for every already-cached shape.
+        self._calibration_digest = (calibration.digest()
+                                    if calibration is not None
+                                    and calibration.fit_ok else "")
         # restricted searches live under their own cache-key variant so they
         # never collide with (or clobber) the unrestricted winners.
         self.variant = search_variant(dataflows)
@@ -65,7 +87,7 @@ class Planner:
              allow_bucketed: bool = True) -> DeploymentPlan:
         cached = self.cache.get(shape, self.elem_bytes, self.hw,
                                 self.variant)
-        if cached is not None and self._admissible(cached.schedule):
+        if cached is not None and self._admissible(cached):
             return cached
         if allow_bucketed:
             bucketed = self._bucketed_plan(shape)
@@ -83,15 +105,23 @@ class Planner:
         """
         cached = self.cache.get(shape, self.elem_bytes, self.hw,
                                 self.variant)
-        if cached is not None and self._admissible(cached.schedule):
+        if cached is not None and self._admissible(cached):
             return cached
         return self._bucketed_plan(shape)
 
-    def _admissible(self, schedule) -> bool:
-        """Defensive check on top of the variant keying: a plan outside this
-        planner's dataflow space (e.g. from a hand-edited cache dir) is a
-        miss, not a silently wrong hit."""
-        return self.dataflows is None or schedule.dataflow in self.dataflows
+    def _admissible(self, plan) -> bool:
+        """Defensive check on top of the variant keying — the shared rule
+        lives in `deploy.plan.plan_admissible` (tune_cached applies the
+        same one)."""
+        return plan_admissible(plan, self.dataflows,
+                               self._calibration_digest)
+
+    def _cost(self, report) -> float:
+        """The ranking cost this planner compares plans by: the trusted
+        profile's calibrated prediction, else the analytical total."""
+        if self._calibration_digest:
+            return self.calibration.predict(report)
+        return report.total_time
 
     def _bucketed_plan(self, shape: GEMMShape) -> Optional[DeploymentPlan]:
         pool = list(self.cache.shapes_for(self.elem_bytes, self.hw,
@@ -103,7 +133,7 @@ class Planner:
                 break
             src = self.cache.peek(src_shape, self.elem_bytes, self.hw,
                                   self.variant)
-            if src is None or not self._admissible(src.schedule):
+            if src is None or not self._admissible(src):
                 continue
             if src.source != SOURCE_TUNED:
                 # never chain transfers off an already-bucketed plan: each
@@ -132,13 +162,17 @@ class Planner:
                 # grid's tiles no longer fill the engine) — but another
                 # source may still pass its own bound, so keep looking.
                 continue
-            if best is None or report.total_time < best[0]:
-                best = (report.total_time, adapted, report)
+            # rank surviving transfers by the planner's ranking cost (the
+            # tolerance guard above stays analytical: it compares the
+            # analytical estimate against an analytically-scaled bound)
+            if best is None or self._cost(report) < best[0]:
+                best = (self._cost(report), adapted, report)
         if best is None:
             return None
         plan = plan_from_tuning(shape, self.hw, best[1], best[2],
                                 source=SOURCE_BUCKETED,
-                                variant=self.variant)
+                                variant=self.variant,
+                                calibration_digest=self._calibration_digest)
         self.cache.put(plan)
         self._pending.append(shape)
         self._emit(plan)
@@ -186,8 +220,11 @@ class Planner:
                        ) -> List[Tuple[GEMMShape, float, float]]:
         """Full-tune bucket-served shapes; upgrade entries that improve.
 
-        Returns (shape, bucketed_estimate, tuned_estimate) per refinement —
-        the validation record of the bucketing shortcut.
+        Returns (shape, bucketed_cost, tuned_cost) per refinement — the
+        validation record of the bucketing shortcut. Costs are the
+        planner's ranking costs (calibrated when a trusted profile is
+        installed), so refinement never un-picks a calibrated winner for
+        looking worse under the analytical prior.
         """
         n = len(self._pending) if limit is None else min(limit,
                                                          len(self._pending))
@@ -207,22 +244,24 @@ class Planner:
         current = self.cache.peek(shape, self.elem_bytes, self.hw,
                                   self.variant)
         fresh = self._tune_shape(shape)
-        old_t = current.report.total_time if current else float("inf")
+        old_t = self._cost(current.report) if current else float("inf")
         # <= so a tie still records the validation: the entry becomes
         # SOURCE_TUNED and can seed future transfers.
-        if fresh.report.total_time <= old_t:
+        if self._cost(fresh.report) <= old_t:
             self.cache.put(fresh)
             self._emit(fresh)
-        return (shape, old_t, fresh.report.total_time)
+        return (shape, old_t, self._cost(fresh.report))
 
     def _tune_shape(self, shape: GEMMShape) -> DeploymentPlan:
         res = tune(shape, self.hw, dataflows=self.dataflows,
                    elem_bytes=self.elem_bytes,
                    max_candidates=self.max_candidates,
-                   store_stage_options=self.store_stage_options)
+                   store_stage_options=self.store_stage_options,
+                   calibration=self.calibration)
         return plan_from_tuning(shape, self.hw, res.schedule, res.report,
                                 candidates_tried=res.candidates_tried,
-                                source=SOURCE_TUNED, variant=self.variant)
+                                source=SOURCE_TUNED, variant=self.variant,
+                                calibration_digest=res.calibration)
 
     # -- validation ---------------------------------------------------------
 
@@ -277,9 +316,10 @@ def model_workload(cfg, batch: int, seq: int,
     `models.matmul.pmm` — every entry is checked against the recorded
     (tag, GEMMShape) pairs of a real forward pass in
     tests/test_plan_routing.py, so launcher warm-ups tune exactly the GEMMs
-    that will be dispatched. Known gap: encoder-decoder cross-attention and
-    encoder-side blocks are not modeled yet (they surface as `extra` shapes
-    in `workload_coverage` for seamless).
+    that will be dispatched — including the encoder-decoder stacks
+    (encoder self-attention blocks over the frame prefix, and the decoder
+    cross-attention K/V projections that re-run over the encoder output on
+    every decode step).
     """
     tokens = batch * seq if kind in ("train", "prefill") else batch
     tokens = max(1, tokens)
@@ -336,6 +376,27 @@ def model_workload(cfg, batch: int, seq: int,
         gemm(tokens, cfg.n_heads * hd, d)               # Q
         gemm(tokens, cfg.n_kv_heads * hd, d)            # K and V (identical)
         gemm(tokens, d, cfg.n_heads * hd)               # O
+    # encoder-decoder stacks (seamless): the encoder runs full
+    # self-attention blocks over the frame prefix, and every decoder layer
+    # adds cross-attention whose Q/O run at decoder rows (identical to the
+    # self-attention shapes above) while K/V project the ENCODER output —
+    # and therefore re-run at encoder rows on every decode step too.
+    if getattr(cfg, "is_encoder_decoder", False):
+        enc_tokens = batch * n_prefix
+        if enc_tokens:
+            if kind in ("train", "prefill"):
+                # encoder self-attention blocks (prefill/train only; decode
+                # consumes the precomputed encoder output)
+                gemm(enc_tokens, cfg.n_heads * hd, d)       # enc Q
+                gemm(enc_tokens, cfg.n_kv_heads * hd, d)    # enc K and V
+                gemm(enc_tokens, d, cfg.n_heads * hd)       # enc O
+                if cfg.d_ff:
+                    gemm(enc_tokens, cfg.d_ff, d)           # enc gate / up
+                    gemm(enc_tokens, d, cfg.d_ff)           # enc down
+            # decoder cross-attention K/V over the encoder output (every
+            # kind — decode recomputes them each step, attention.py has no
+            # cross-attention cache)
+            gemm(enc_tokens, cfg.n_kv_heads * hd, d)
     # SSM mixer projections of the hybrid stacks (zamba2); the shared
     # attention block above supplies the attn/FFN shapes
     if pattern == "mamba2_hybrid":

@@ -27,18 +27,30 @@ def add_plan_args(ap) -> None:
 
 
 def build_planner(cache_dir: str, grid, max_candidates: int,
-                  dataflows=None) -> Planner:
+                  dataflows=None, calibration=None) -> Planner:
     """A Planner on the pod-view accelerator with a persistent cache.
 
     `dataflows` restricts the candidate search (the restricted plans live
     under their own cache variant) — `dryrun --route-dataflows` uses it to
     force e.g. Fig. 6c schedules into the cache for the routed proof.
+
+    A persisted calibration profile for this hardware fingerprint (written
+    by `dryrun --calibrate` next to the plans) is loaded automatically, so
+    every launcher that warms from the cache dir tunes with the measured
+    cost model; pass `calibration` explicitly to override (or
+    `calibration=False` to force the analytical prior).
     """
     from repro.hw.config import tpu_pod_as_accelerator
-    return Planner(tpu_pod_as_accelerator(tuple(grid)),
-                   cache=PlanCache(cache_dir),
+    from repro.sim.calibrate import load_profile
+    hw = tpu_pod_as_accelerator(tuple(grid))
+    if calibration is None:
+        calibration = load_profile(cache_dir, hw)
+    elif calibration is False:
+        calibration = None
+    return Planner(hw, cache=PlanCache(cache_dir),
                    max_candidates=max_candidates,
-                   dataflows=dataflows)
+                   dataflows=dataflows,
+                   calibration=calibration)
 
 
 def warm_buckets(planner: Planner,

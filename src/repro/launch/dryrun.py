@@ -29,6 +29,12 @@ lowering fallbacks (the ROADMAP routed-compile proof; pair with
 --route-dataflows restricts the warm-up's candidate search, e.g.
 `--route-dataflows systolic_over_summa` proves the Fig. 6c outer-systolic
 mode executes on the production mesh (see docs/dataflows.md).
+--calibrate closes the measurement loop first: every executable mode runs
+on a --plan-grid mesh of local devices, a CalibrationProfile is fitted and
+persisted into --plan-cache, the warm-up tunes with the measured cost
+model, and the JSON gains a 'calibration' section (fit quality + how many
+of this cell's tuning decisions the calibration flipped). See
+docs/plan-lifecycle.md "Calibration".
 """
 import argparse
 import dataclasses
@@ -204,18 +210,107 @@ def _cost_analysis(compiled) -> Dict[str, float]:
 # per-cell run
 # ---------------------------------------------------------------------------
 
+def calibrate_plan_cache(plan_cache: str, plan_grid, reps: int = 1
+                         ) -> Dict[str, Any]:
+    """Fit the SoftHier cost model to this host's measured mode efficiency.
+
+    Runs `sim.calibrate.measure_modes` on a `plan_grid` mesh carved out of
+    the local devices (every executable mode over the GEMM grid, lowering
+    asserted clean), least-squares-fits a `CalibrationProfile`, and persists
+    it NEXT TO THE PLANS keyed by the pod-view hardware fingerprint — the
+    same profile `deploy.warmup.build_planner` auto-loads, so every later
+    warm-up from this cache dir tunes with the measured cost model.
+    Returns the JSON `calibration` section (fit stats + measurement count).
+    """
+    import jax
+
+    from repro.hw.config import tpu_pod_as_accelerator
+    from repro.sim import calibrate as cal
+
+    rows, cols = plan_grid
+    if rows != cols or rows < 4:
+        # the mode-case table needs a square grid for the cannon ring and
+        # >= 4x4 for a non-degenerate outer ring of 2x2 inner groups —
+        # fail with the requirement, not a deep clean-lowering assertion
+        raise ValueError(
+            f"--calibrate requires a square --plan-grid of at least 4x4 "
+            f"(every executable mode must lower cleanly on the "
+            f"measurement mesh); got {rows}x{cols}")
+    hw = tpu_pod_as_accelerator(tuple(plan_grid))
+    mesh = jax.make_mesh(tuple(plan_grid), ("data", "model"))
+    t0 = time.time()
+    profile, samples = cal.calibrate_mesh(hw, mesh, reps=reps)
+    path = cal.save_profile(plan_cache, profile)
+    print(f"calibration: {profile.describe()} from {len(samples)} "
+          f"measurements in {time.time()-t0:.1f}s -> {path}", flush=True)
+    return {
+        "profile": profile.to_dict(),
+        "profile_digest": profile.digest(),
+        "samples": len(samples),
+        "fit_ok": profile.fit_ok,
+        "rank_agreement_before": profile.rank_agreement_before,
+        "rank_agreement_after": profile.rank_agreement_after,
+        "picks_measured_ratio": profile.picks_measured_ratio,
+    }
+
+
+def calibration_rank_flips(planner, workload) -> Dict[str, Any]:
+    """Re-tune the workload with and without the planner's profile and
+    count schedules the calibrated ranking changed (fresh searches on both
+    sides — the cache is not consulted, and BOTH searches enumerate the
+    same dataflow space, so the report isolates the ranking effect of the
+    measured scale factors from the trusted profile's search-space
+    widening)."""
+    from repro.core.autotuner import default_dataflows, tune
+    from repro.sim.calibrate import is_trusted
+
+    flips, flipped = 0, []
+    shapes = list(dict.fromkeys(workload))
+    out = {"workload_shapes": len(shapes), "trusted": True}
+    if not is_trusted(planner.calibration):
+        # an untrusted profile is defined to change no ranking (the tuner
+        # ignores it), so the two searches below would be identical —
+        # report the foregone conclusion without paying 2N candidate
+        # searches
+        return {**out, "trusted": False, "rank_flips": 0, "flipped": []}
+    space = planner.dataflows or default_dataflows(planner.calibration)
+    for shape in shapes:
+        kw = dict(dataflows=space,
+                  elem_bytes=planner.elem_bytes,
+                  max_candidates=planner.max_candidates,
+                  store_stage_options=planner.store_stage_options)
+        try:
+            base = tune(shape, planner.hw, **kw)
+            calib = tune(shape, planner.hw, calibration=planner.calibration,
+                         **kw)
+        except RuntimeError:
+            continue
+        if base.schedule != calib.schedule:
+            flips += 1
+            flipped.append({"shape": [shape.m, shape.n, shape.k],
+                            "analytical": base.schedule.describe(),
+                            "calibrated": calib.schedule.describe()})
+    return {**out, "rank_flips": flips, "flipped": flipped}
+
+
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              skip_accounting: bool = False,
              plan_cache: str = "",
              plan_grid=(4, 4),
              route: bool = False,
-             route_dataflows=None) -> Dict[str, Any]:
+             route_dataflows=None,
+             calibrate: bool = False) -> Dict[str, Any]:
     cfg = get_config(arch)
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
     from repro.models import shard_ctx
     shard_ctx.set_mesh(mesh)   # pin activation layouts during tracing
     gemm_ctx = None
+    calibration_out = None
+    if calibrate:
+        # fit + persist BEFORE the planner is built so the warm-up below
+        # already tunes with the measured cost model
+        calibration_out = calibrate_plan_cache(plan_cache, plan_grid)
     if plan_cache:
         # Default: record-only gemm context — every pmm the cell traces is
         # logged so the JSON can cross-validate model_workload (and the
@@ -229,11 +324,16 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         from repro.deploy.warmup import build_planner, warm_buckets
         planner = build_planner(plan_cache, plan_grid, max_candidates=12,
                                 dataflows=route_dataflows)
-        if route:
+        if route or calibration_out is not None:
             from repro.deploy import model_workload
             specs0 = input_specs(cfg, shape_name)
             workload = model_workload(cfg, specs0["batch"], specs0["seq"],
                                       kind=specs0["kind"], dp=_dp_size(mesh))
+        if calibration_out is not None:
+            # how many of this cell's tuning decisions the measured scale
+            # factors actually changed (fresh searches both sides)
+            calibration_out.update(calibration_rank_flips(planner, workload))
+        if route:
             warm_buckets(planner, workload)
             planner.batch_tune(workload, allow_bucketed=True,
                                skip_illegal=route_dataflows is not None)
@@ -246,6 +346,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
         "routed": bool(route),
     }
+    if calibration_out is not None:
+        out["calibration"] = calibration_out
     t0 = time.time()
 
     # 1. FULL config: compile + memory analysis
@@ -383,12 +485,24 @@ def main():
                          "production mesh); shapes with no legal restricted "
                          "schedule stay unplanned and dispatch as auto "
                          "fallbacks")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fit the SoftHier cost model to measured mode "
+                         "efficiency before warming: run every executable "
+                         "mode on a --plan-grid mesh of local devices, "
+                         "least-squares-fit per-resource scale factors, "
+                         "persist the profile into --plan-cache (keyed by "
+                         "hw fingerprint, auto-loaded by later warm-ups), "
+                         "re-tune this cell's workload and report rank-flip "
+                         "counts in the JSON 'calibration' section")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
     if args.route and not args.plan_cache:
         ap.error("--route requires --plan-cache")
     if args.route_dataflows and not args.route:
         ap.error("--route-dataflows requires --route")
+    if args.calibrate and not args.plan_cache:
+        ap.error("--calibrate requires --plan-cache (the profile persists "
+                 "next to the plans it calibrates)")
 
     os.makedirs(args.out, exist_ok=True)
     tag = f"{args.arch}__{args.shape}__{'mp' if args.multi_pod else 'sp'}"
@@ -401,7 +515,8 @@ def main():
                           plan_cache=args.plan_cache,
                           plan_grid=args.plan_grid,
                           route=args.route,
-                          route_dataflows=args.route_dataflows)
+                          route_dataflows=args.route_dataflows,
+                          calibrate=args.calibrate)
         result["status"] = "ok"
     except Exception as e:
         result = {"arch": args.arch, "shape": args.shape,

@@ -1,5 +1,12 @@
+from repro.sim.calibrate import (CalibrationProfile, CalibrationSample,
+                                 calibrate_mesh, fit_profile, is_trusted,
+                                 load_profile, measure_modes, rank_stats,
+                                 ranking_cost, save_profile)
 from repro.sim.perf import PerfReport, estimate
 from repro.sim.softhier import FunctionalSim, SimResult, run_gemm, verify_gemm
 
-__all__ = ["PerfReport", "estimate", "FunctionalSim", "SimResult",
+__all__ = ["CalibrationProfile", "CalibrationSample", "PerfReport",
+           "calibrate_mesh", "estimate", "fit_profile", "is_trusted",
+           "load_profile", "measure_modes", "rank_stats", "ranking_cost",
+           "save_profile", "FunctionalSim", "SimResult",
            "run_gemm", "verify_gemm"]

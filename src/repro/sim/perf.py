@@ -23,8 +23,11 @@ buffering):
   dimension-ordered route. Hardware collectives traverse links once —
   the mask-based broadcast of §2.1.
 
-The model is calibrated analytically (no RTL); all constants come from
-`AcceleratorConfig`.
+The model is an analytical prior (no RTL); all constants come from
+`AcceleratorConfig`. `sim/calibrate.py` fits measured per-resource scale
+factors on top of it — `PerfReport.calibrated(profile)` rescales a report by
+a fitted `CalibrationProfile`, turning the prior into a per-hardware
+predictor the autotuner can trust.
 """
 from __future__ import annotations
 
@@ -54,6 +57,9 @@ class PerfReport:
     hbm_bytes: int
     noc_bytes: int
     n_supersteps: int
+    # digest of the CalibrationProfile whose measured scale factors rescaled
+    # this report ("" = the raw analytical prior; see sim/calibrate.py).
+    calibration: str = ""
 
     @property
     def achieved_flops(self) -> float:
@@ -76,6 +82,34 @@ class PerfReport:
     @classmethod
     def from_dict(cls, d: Dict[str, float]) -> "PerfReport":
         return cls(**d)
+
+    def resource_shares(self) -> Tuple[float, float, float]:
+        """(compute, dma, noc) fractions of the busy time — how this report
+        attributes its total to the three resource classes. The calibration
+        layer's feature vector is `total_time * shares` (so identity scale
+        factors reproduce `total_time` exactly)."""
+        busy = self.compute_time + self.dma_time + self.noc_time
+        if busy <= 0.0:
+            return (1.0, 0.0, 0.0)
+        return (self.compute_time / busy, self.dma_time / busy,
+                self.noc_time / busy)
+
+    def calibrated(self, profile) -> "PerfReport":
+        """This report rescaled by a fitted `CalibrationProfile`.
+
+        Each resource component is multiplied by its measured scale factor
+        and `total_time` becomes the profile's prediction (clamped so the
+        superstep invariant total >= max(component, barrier) survives any
+        scale combination). An identity profile returns an identical report
+        apart from the recorded calibration digest.
+        """
+        c = self.compute_time * profile.compute_scale
+        d = self.dma_time * profile.dma_scale
+        n = self.noc_time * profile.noc_scale
+        total = max(profile.predict(self), c, d, n, self.barrier_time)
+        return dataclasses.replace(self, total_time=total, compute_time=c,
+                                   dma_time=d, noc_time=n,
+                                   calibration=profile.digest())
 
     def summary(self, hw: AcceleratorConfig) -> str:
         return (f"time={self.total_time*1e6:.1f}us "

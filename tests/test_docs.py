@@ -8,7 +8,11 @@ load-bearing doc invariants mechanical:
 - every `DATAFLOWS` name, every `EXEC_MODES` mode, and every machine-
   readable `Fallback` reason string appears in docs/dataflows.md (the
   lowering reference a degrade report sends you to);
-- every relative link in README.md and docs/*.md resolves to a real file.
+- every relative link in README.md and docs/*.md resolves to a real file;
+- the calibration surface stays pinned: the `--calibrate` CLI flag exists
+  in dryrun AND is documented, the BENCH_* section names CI asserts on
+  appear in docs/benchmarking.md, and the plan-lifecycle doc describes the
+  Calibration stage the warm-up path actually executes.
 
 Device-free (string checks only), so CI's fast subset runs them.
 """
@@ -22,6 +26,9 @@ from repro.core.schedule import DATAFLOWS
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 DATAFLOWS_MD = os.path.join(ROOT, "docs", "dataflows.md")
+BENCHMARKING_MD = os.path.join(ROOT, "docs", "benchmarking.md")
+LIFECYCLE_MD = os.path.join(ROOT, "docs", "plan-lifecycle.md")
+DRYRUN_PY = os.path.join(ROOT, "src", "repro", "launch", "dryrun.py")
 
 
 def _read(path: str) -> str:
@@ -49,6 +56,51 @@ def test_every_fallback_reason_documented(reason):
         f"fallback reason {reason!r} is missing from docs/dataflows.md — "
         f"a degrade report would point users at a doc that never mentions "
         f"it")
+
+
+# -- calibration surface: CLI flag + artifact schema names stay documented --
+
+def test_calibrate_flag_exists_and_is_documented():
+    """`--calibrate` must exist in dryrun's CLI and be documented where the
+    lifecycle/benchmarking docs send readers — a renamed flag with stale
+    docs is exactly the drift this guard exists for."""
+    assert '"--calibrate"' in _read(DRYRUN_PY), (
+        "dryrun lost its --calibrate flag; update docs + CI if renamed")
+    for doc in (BENCHMARKING_MD, LIFECYCLE_MD):
+        assert "--calibrate" in _read(doc), (
+            f"{os.path.relpath(doc, ROOT)} no longer documents the "
+            f"--calibrate entry point")
+
+
+@pytest.mark.parametrize("section", [
+    "## BENCH_routing.json",
+    "## BENCH_calibration.json",
+])
+def test_bench_artifact_sections_present(section):
+    """CI's assertions reference these artifacts by name; the schema doc
+    must keep a section per artifact."""
+    assert section in _read(BENCHMARKING_MD), (
+        f"docs/benchmarking.md lost its {section!r} section")
+
+
+@pytest.mark.parametrize("field", [
+    # the BENCH_calibration.json keys CI asserts on
+    "fit_ok", "rank_agreement", "measured_geomean_ratio", "default_space",
+    "step_overhead_s",
+])
+def test_calibration_schema_fields_documented(field):
+    assert field in _read(BENCHMARKING_MD), (
+        f"BENCH_calibration.json field {field!r} is asserted by CI but "
+        f"missing from docs/benchmarking.md")
+
+
+def test_plan_lifecycle_documents_calibration_stage():
+    text = _read(LIFECYCLE_MD)
+    assert "## Calibration" in text
+    for needle in ("CalibrationProfile", "fit_ok", "calibration_digest",
+                   ".profile.json"):
+        assert needle in text, (
+            f"docs/plan-lifecycle.md Calibration stage lost {needle!r}")
 
 
 def _markdown_files():

@@ -1,0 +1,139 @@
+"""Property-based invariants of the SoftHier performance model
+(sim/perf.py) — the contracts the measured-calibration layer relies on:
+
+- **superstep max semantics**: a report's total is the sum over supersteps
+  of max(compute, comm) plus barriers, so `total_time >= max(compute_time,
+  dma_time, noc_time, barrier_time)` for every legal schedule — this is
+  what makes the calibration's clamped rescale (`PerfReport.calibrated`)
+  safe for any non-negative scale combination;
+- **monotonicity**: more work can never be predicted faster — growing K
+  (more K-chunks per tile) or the macro-iteration tile counts (more grid
+  sweeps) must not decrease the predicted total;
+- **round-trip exactness**: `PerfReport.to_dict/from_dict` is the identity
+  (bit-exact floats), including the `calibration` provenance field the
+  plan schema persists.
+
+Device-free: schedule building and pricing never touch jax.
+"""
+import dataclasses
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(requirements-dev.txt)")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.schedule import GEMMShape, Schedule, Tiling, build_program
+from repro.hw.config import AcceleratorConfig, HBMConfig, NoCConfig, TileConfig
+from repro.sim.perf import PerfReport, estimate
+
+MINI = AcceleratorConfig(name="mini", grid=(4, 4),
+                         tile=TileConfig(l1_bytes=4 * 1024 * 1024),
+                         noc=NoCConfig(), hbm=HBMConfig(n_channels=8))
+
+pow2 = lambda lo, hi: st.sampled_from(
+    [1 << i for i in range(lo.bit_length() - 1, hi.bit_length())])
+
+# legal-by-construction schedule space on the 4x4 MINI grid: dimensions are
+# multiples of the grid factors, tk drawn from the tuner's own menu
+schedules = st.fixed_dictionaries({
+    "m": pow2(64, 512),
+    "n": pow2(64, 512),
+    "k": pow2(64, 2048),
+    "gm": st.sampled_from([1, 2, 4]),
+    "tk": st.sampled_from([64, 128, 256]),
+    "dataflow": st.sampled_from(["summa", "systolic", "splitk_summa",
+                                 "baseline"]),
+    "gk": st.sampled_from([1, 2, 4]),
+    "stages": st.sampled_from([1, 4]),
+})
+
+
+def build(p, m=None, k=None, iter_m=1):
+    m = m if m is not None else p["m"]
+    k = k if k is not None else p["k"]
+    gk = p["gk"] if p["dataflow"] == "splitk_summa" else 1
+    rest = 16 // gk
+    gm = min(p["gm"], rest)
+    gn = rest // gm
+    if p["dataflow"] == "systolic" and (gm == 1 or gn == 1):
+        gm = gn = None  # caller skips
+    if gm is None:
+        return None
+    shape = GEMMShape(m * iter_m, n=p["n"], k=k)
+    if shape.m % (gm * iter_m) or shape.n % gn or shape.k % gk:
+        return None
+    sched = Schedule(shape, Tiling(gm, gn, gk, iter_m=iter_m, tk=p["tk"]),
+                     p["dataflow"], store_stages=p["stages"], elem_bytes=4)
+    try:
+        return build_program(sched, MINI)
+    except (ValueError, KeyError):
+        return None
+
+
+@given(p=schedules)
+@settings(max_examples=60, deadline=None)
+def test_total_time_dominates_every_resource(p):
+    prog = build(p)
+    if prog is None:
+        return
+    rep = estimate(prog, MINI)
+    assert rep.total_time >= rep.compute_time - 1e-12
+    assert rep.total_time >= rep.dma_time - 1e-12
+    assert rep.total_time >= rep.noc_time - 1e-12
+    assert rep.total_time >= rep.barrier_time - 1e-12
+    assert rep.total_time > 0.0
+    shares = rep.resource_shares()
+    assert all(s >= 0.0 for s in shares)
+    assert sum(shares) == pytest.approx(1.0)
+
+
+@given(p=schedules)
+@settings(max_examples=40, deadline=None)
+def test_monotone_in_k(p):
+    small, big = build(p), build(p, k=2 * p["k"])
+    if small is None or big is None:
+        return
+    t_small = estimate(small, MINI).total_time
+    t_big = estimate(big, MINI).total_time
+    assert t_big >= t_small - 1e-12, (
+        f"doubling K reduced predicted time: {t_small} -> {t_big}")
+
+
+@given(p=schedules)
+@settings(max_examples=40, deadline=None)
+def test_monotone_in_tile_count(p):
+    """More macro-iterations (the grid sweeping a bigger M) can never be
+    predicted faster than the single-coverage problem."""
+    small, big = build(p, iter_m=1), build(p, iter_m=2)
+    if small is None or big is None:
+        return
+    t_small = estimate(small, MINI).total_time
+    t_big = estimate(big, MINI).total_time
+    assert t_big >= t_small - 1e-12, (
+        f"doubling the M tile count reduced predicted time: "
+        f"{t_small} -> {t_big}")
+
+
+reports = st.builds(
+    PerfReport,
+    total_time=st.floats(0, 1e3, allow_nan=False),
+    compute_time=st.floats(0, 1e3, allow_nan=False),
+    dma_time=st.floats(0, 1e3, allow_nan=False),
+    noc_time=st.floats(0, 1e3, allow_nan=False),
+    barrier_time=st.floats(0, 1e3, allow_nan=False),
+    total_flops=st.integers(0, 1 << 50),
+    hbm_bytes=st.integers(0, 1 << 40),
+    noc_bytes=st.integers(0, 1 << 40),
+    n_supersteps=st.integers(0, 1 << 20),
+    calibration=st.sampled_from(["", "a53c52d7174b", "deadbeef0123"]),
+)
+
+
+@given(rep=reports)
+@settings(max_examples=100, deadline=None)
+def test_report_round_trip_is_exact(rep):
+    back = PerfReport.from_dict(rep.to_dict())
+    assert back == rep                       # bit-exact, calibration included
+    assert dataclasses.asdict(back) == dataclasses.asdict(rep)

@@ -7,7 +7,8 @@ Covers the PR-2 contracts:
 - dit_gemm derives the planner GEMMShape from flattened leading dims
   (regression: batched operands used to read a.shape[0]/b.shape[1] raw);
 - model_workload is cross-validated against the (tag, GEMMShape) pairs the
-  model actually traces — exact coverage for gqa/MLA/MoE/mamba2/xlstm;
+  model actually traces — exact coverage for gqa/MLA/MoE/mamba2/xlstm/vlm
+  and the encoder-decoder stack (seamless, incl. cross-attention K/V);
 - a serve-style installed context routes matmuls through dit_gemm with
   plan hits for the model's workload shapes (multidevice, subprocess).
 """
@@ -35,8 +36,9 @@ MINI = AcceleratorConfig(name="mini", grid=(4, 4),
                          tile=TileConfig(l1_bytes=4 * 1024 * 1024),
                          noc=NoCConfig(), hbm=HBMConfig(n_channels=8))
 
-# one smoke arch per block kind the satellite names (vlm joins the matrix
-# now that model_workload models the modality-frontend projection)
+# one smoke arch per block kind the satellite names (vlm joined when
+# model_workload learned the modality-frontend projection; encdec joined
+# when it learned the encoder blocks + cross-attention K/V projections)
 BLOCK_KINDS = {
     "gqa": "gemma-2b",
     "mla": "deepseek-v2-236b",
@@ -44,20 +46,34 @@ BLOCK_KINDS = {
     "mamba2": "zamba2-1.2b",
     "xlstm": "xlstm-1.3b",
     "vlm": "phi-3-vision-4.2b",
+    "encdec": "seamless-m4t-medium",
 }
+
+
+def _stub_embeds(cfg, batch: int, key: str, abstract: bool):
+    shape = (batch, cfg.n_prefix, cfg.d_model)
+    if abstract:
+        return {key: jax.ShapeDtypeStruct(shape, jnp.bfloat16)}
+    rng = np.random.default_rng(9)
+    return {key: jnp.asarray(rng.standard_normal(shape), jnp.bfloat16)}
 
 
 def _prefill_kwargs(cfg, batch: int, abstract: bool = True):
     """Extra forward() inputs a modality-frontend arch needs (the VLM stub's
-    precomputed patch embeddings)."""
-    if getattr(cfg, "frontend", "none") != "vision_stub":
-        return {}
-    shape = (batch, cfg.n_prefix, cfg.d_model)
-    if abstract:
-        return {"prefix_embeds": jax.ShapeDtypeStruct(shape, jnp.bfloat16)}
-    rng = np.random.default_rng(9)
-    return {"prefix_embeds": jnp.asarray(rng.standard_normal(shape),
-                                         jnp.bfloat16)}
+    precomputed patch embeddings / the enc-dec stub's frame embeddings)."""
+    if getattr(cfg, "frontend", "none") == "vision_stub":
+        return _stub_embeds(cfg, batch, "prefix_embeds", abstract)
+    if getattr(cfg, "is_encoder_decoder", False):
+        return _stub_embeds(cfg, batch, "encoder_embeds", abstract)
+    return {}
+
+
+def _decode_kwargs(cfg, batch: int):
+    """Extra decode_step() inputs: enc-dec archs attend to the precomputed
+    encoder output every step (cross-attention K/V re-project it)."""
+    if getattr(cfg, "is_encoder_decoder", False):
+        return _stub_embeds(cfg, batch, "encoder_out", abstract=True)
+    return {}
 
 
 # ---------------------------------------------------------------------------
@@ -183,8 +199,9 @@ def test_dit_gemm_modes_differentiable():
 @pytest.mark.parametrize("kind", sorted(BLOCK_KINDS))
 def test_model_workload_cross_validation(kind):
     """model_workload must describe exactly the GEMMs the model runs: every
-    predicted shape is observed and every observed shape predicted (for the
-    decoder-only block kinds; enc-dec/frontend are a documented gap)."""
+    predicted shape is observed and every observed shape predicted — at
+    100% coverage for every block kind, including the encoder-decoder
+    stack (encoder blocks + decoder cross-attention K/V projections)."""
     cfg = smoke_config(BLOCK_KINDS[kind])
     b, s = 2, 16
     kwargs = _prefill_kwargs(cfg, b)
@@ -210,6 +227,7 @@ def test_model_workload_cross_validation_decode(kind):
     from repro.models.model import decode_init, decode_step
     cfg = smoke_config(BLOCK_KINDS[kind])
     b, max_len = 2, 16
+    kwargs = _decode_kwargs(cfg, b)
     ctx = GemmContext(mesh=None)
     with shard_ctx.gemm_context(ctx):
         pshapes = jax.eval_shape(
@@ -218,8 +236,9 @@ def test_model_workload_cross_validation_decode(kind):
             lambda: decode_init({}, cfg, b, max_len))
         toks = jax.ShapeDtypeStruct((b, 1), jnp.int32)
         pos = jax.ShapeDtypeStruct((), jnp.int32)
-        jax.eval_shape(lambda p, c, t, i: decode_step(p, c, t, i, cfg),
-                       pshapes, caches, toks, pos)
+        jax.eval_shape(lambda p, c, t, i, **kws: decode_step(
+                           p, c, t, i, cfg, encoder_out=kws.get("encoder_out")),
+                       pshapes, caches, toks, pos, **kwargs)
     observed = ctx.stats.observed_shapes()
     predicted = model_workload(cfg, b, max_len, kind="decode")
     cov = workload_coverage(predicted, observed)

@@ -47,7 +47,12 @@ def test_forward_shapes_and_finite(arch):
     assert np.isfinite(np.asarray(logits)).all()
 
 
-@pytest.mark.parametrize("arch", list_archs())
+# zamba2's scanned hybrid super-layers are the one smoke train step that
+# breaks the 10s budget — it rides the full lane (CI's fast lane runs the
+# other nine archs, which cover every other block kind)
+@pytest.mark.parametrize("arch", [
+    pytest.param(a, marks=pytest.mark.slow if a == "zamba2-1.2b" else [])
+    for a in list_archs()])
 def test_train_step_runs(arch):
     cfg = smoke_config(arch)
     params = init_params(KEY, cfg)

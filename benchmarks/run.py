@@ -7,9 +7,10 @@ the dry-run artifacts if present (results/dryrun). `routing_bench` also
 writes the BENCH_routing.json artifact (plan-resolve latency, per-mode
 trace+lower cost, per-mode execution efficiency vs XLA auto) and
 `calibration_bench` writes BENCH_calibration.json (cost-model fit quality,
-rank agreement, calibrated-vs-analytical pick quality) — every BENCH_*
-artifact's schema, production command, and regression meaning is
-documented in docs/benchmarking.md."""
+rank agreement, calibrated-vs-analytical pick quality) and `tracing_bench`
+writes BENCH_tracing.json (observability-layer overhead on the dispatch
+path, with asserted bounds) — every BENCH_* artifact's schema, production
+command, and regression meaning is documented in docs/benchmarking.md."""
 from __future__ import annotations
 
 import sys
@@ -20,7 +21,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (calibration_bench, fig7_case_study, fig9_11_gh200,
                             fig12_portability, microbench, plan_bench,
-                            routing_bench)
+                            routing_bench, tracing_bench)
     modules = [
         ("fig7", fig7_case_study),
         ("fig9-11", fig9_11_gh200),
@@ -29,6 +30,7 @@ def main() -> None:
         ("plan", plan_bench),
         ("routing", routing_bench),
         ("calibration", calibration_bench),
+        ("tracing", tracing_bench),
     ]
     try:
         from benchmarks import roofline_table

@@ -46,6 +46,7 @@ preconditions, and fallback reasons.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Optional
 
 import jax
@@ -63,6 +64,17 @@ MODES = ("auto", "summa", "cannon", "splitk", "allgather")
 
 def _axis_size(mesh: Mesh, name: str) -> int:
     return mesh.shape[name]
+
+
+@contextlib.contextmanager
+def _mode_scope(mode: str):
+    """Name every mode's dispatch for both profiling surfaces: the HLO ops
+    it traces (`jax.named_scope` — a device profile / xprof segments by
+    `dit_gemm.<mode>`) and the host-side trace-time work
+    (`jax.profiler.TraceAnnotation`)."""
+    name = f"dit_gemm.{mode}"
+    with jax.named_scope(name), jax.profiler.TraceAnnotation(name):
+        yield
 
 
 # ---------------------------------------------------------------------------
@@ -150,8 +162,9 @@ def _cannon_acc(a_blk: jax.Array, b_blk: jax.Array, row_axis: str,
         shifted = jax.lax.ppermute(val, row_axis, up)
         return jnp.where(j > s, shifted, val), None
 
-    a_cur, _ = jax.lax.scan(skew_a, a_blk, jnp.arange(d - 1))
-    b_cur, _ = jax.lax.scan(skew_b, b_blk, jnp.arange(d - 1))
+    with jax.named_scope("skew"):
+        a_cur, _ = jax.lax.scan(skew_a, a_blk, jnp.arange(d - 1))
+        b_cur, _ = jax.lax.scan(skew_b, b_blk, jnp.arange(d - 1))
 
     def step(carry, _):
         a_cur, b_cur, acc = carry
@@ -161,7 +174,9 @@ def _cannon_acc(a_blk: jax.Array, b_blk: jax.Array, row_axis: str,
         return (a_cur, b_cur, acc), None
 
     acc = jnp.zeros((a_blk.shape[0], b_blk.shape[1]), dtype=jnp.float32)
-    (_, _, acc), _ = jax.lax.scan(step, (a_cur, b_cur, acc), None, length=d)
+    with jax.named_scope("rotate_accumulate"):
+        (_, _, acc), _ = jax.lax.scan(step, (a_cur, b_cur, acc), None,
+                                      length=d)
     return acc
 
 
@@ -314,7 +329,8 @@ def hierarchical_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
             return acc, None
 
         acc = jnp.zeros((a_loc.shape[0], b_loc.shape[1]), dtype=jnp.float32)
-        acc, _ = jax.lax.scan(outer_step, acc, jnp.arange(panels))
+        with jax.named_scope("outer_panels"):
+            acc, _ = jax.lax.scan(outer_step, acc, jnp.arange(panels))
         return acc.astype(a_loc.dtype)
 
     spec = P((row_axis, inner_row), (col_axis, inner_col))
@@ -377,8 +393,9 @@ def outer_systolic_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
             shifted = jax.lax.ppermute(val, row_axis, ring)
             return jnp.where(oj > s, shifted, val), None
 
-        a_cur, _ = jax.lax.scan(skew_a, a_loc, jnp.arange(d - 1))
-        b_cur, _ = jax.lax.scan(skew_b, b_loc, jnp.arange(d - 1))
+        with jax.named_scope("outer_skew"):
+            a_cur, _ = jax.lax.scan(skew_a, a_loc, jnp.arange(d - 1))
+            b_cur, _ = jax.lax.scan(skew_b, b_loc, jnp.arange(d - 1))
 
         def outer_step(carry, _):
             a_cur, b_cur, acc = carry
@@ -389,8 +406,9 @@ def outer_systolic_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
             return (a_cur, b_cur, acc), None
 
         acc = jnp.zeros((a_loc.shape[0], b_loc.shape[1]), dtype=jnp.float32)
-        (_, _, acc), _ = jax.lax.scan(outer_step, (a_cur, b_cur, acc), None,
-                                      length=d)
+        with jax.named_scope("outer_steps"):
+            (_, _, acc), _ = jax.lax.scan(outer_step, (a_cur, b_cur, acc),
+                                          None, length=d)
         return acc.astype(a_loc.dtype)
 
     spec = P((row_axis, inner_row), (col_axis, inner_col))
@@ -439,26 +457,28 @@ def exec_plan_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
     emesh = (exec_plan.view.materialize(mesh) if exec_plan.view is not None
              else mesh)
     mode = exec_plan.mode
-    if mode == "auto":
-        return auto_gemm(a, b, mesh, ax["row"], ax["col"])
-    if mode == "summa":
-        return summa_gemm(a, b, emesh, ax["row"], ax["col"])
-    if mode == "cannon":
-        return cannon_gemm(a, b, emesh, ax["row"], ax["col"])
-    if mode == "allgather":
-        return allgather_gemm(a, b, emesh, ax["row"], ax["col"])
-    if mode == "splitk":
-        return splitk_gemm(a, b, emesh, k_axis=ax["k"],
-                           scatter=exec_plan.kwargs.get("scatter", True))
-    if mode == "splitk_summa":
-        return splitk_summa_gemm(a, b, emesh, ax["row"], ax["col"], ax["k"],
-                                 scatter=exec_plan.kwargs.get("scatter", True))
-    if mode == "hierarchical":
-        return hierarchical_gemm(a, b, emesh, ax["row"], ax["col"],
-                                 ax["inner_row"], ax["inner_col"])
-    if mode == "outer_systolic":
-        return outer_systolic_gemm(a, b, emesh, ax["row"], ax["col"],
-                                   ax["inner_row"], ax["inner_col"])
+    with _mode_scope(mode):
+        if mode == "auto":
+            return auto_gemm(a, b, mesh, ax["row"], ax["col"])
+        if mode == "summa":
+            return summa_gemm(a, b, emesh, ax["row"], ax["col"])
+        if mode == "cannon":
+            return cannon_gemm(a, b, emesh, ax["row"], ax["col"])
+        if mode == "allgather":
+            return allgather_gemm(a, b, emesh, ax["row"], ax["col"])
+        if mode == "splitk":
+            return splitk_gemm(a, b, emesh, k_axis=ax["k"],
+                               scatter=exec_plan.kwargs.get("scatter", True))
+        if mode == "splitk_summa":
+            return splitk_summa_gemm(
+                a, b, emesh, ax["row"], ax["col"], ax["k"],
+                scatter=exec_plan.kwargs.get("scatter", True))
+        if mode == "hierarchical":
+            return hierarchical_gemm(a, b, emesh, ax["row"], ax["col"],
+                                     ax["inner_row"], ax["inner_col"])
+        if mode == "outer_systolic":
+            return outer_systolic_gemm(a, b, emesh, ax["row"], ax["col"],
+                                       ax["inner_row"], ax["inner_col"])
     raise KeyError(f"ExecPlan resolved to unknown mode {mode!r}")
 
 
@@ -501,19 +521,22 @@ def dit_gemm(a: jax.Array, b: jax.Array, mesh: Mesh, mode: str = "auto",
                                    overrides=kw)
     if exec_plan is not None:
         out = exec_plan_gemm(a, b, mesh, exec_plan)
-    elif mode == "auto":
-        out = auto_gemm(a, b, mesh, row_axis, col_axis)
-    elif mode == "summa":
-        out = summa_gemm(a, b, mesh, row_axis, col_axis)
-    elif mode == "cannon":
-        out = cannon_gemm(a, b, mesh, row_axis, col_axis)
-    elif mode == "splitk":
-        out = splitk_gemm(a, b, mesh, k_axis=kw.get("k_axis", col_axis),
-                          scatter=kw.get("scatter", True))
-    elif mode == "allgather":
-        out = allgather_gemm(a, b, mesh, row_axis, col_axis)
-    else:
+    elif mode not in MODES:
         raise KeyError(f"unknown mode {mode!r}; have {MODES}")
+    else:
+        with _mode_scope(mode):
+            if mode == "auto":
+                out = auto_gemm(a, b, mesh, row_axis, col_axis)
+            elif mode == "summa":
+                out = summa_gemm(a, b, mesh, row_axis, col_axis)
+            elif mode == "cannon":
+                out = cannon_gemm(a, b, mesh, row_axis, col_axis)
+            elif mode == "splitk":
+                out = splitk_gemm(a, b, mesh,
+                                  k_axis=kw.get("k_axis", col_axis),
+                                  scatter=kw.get("scatter", True))
+            else:
+                out = allgather_gemm(a, b, mesh, row_axis, col_axis)
     if len(lead) != 1:
         out = out.reshape(*lead, b.shape[1])
     return out

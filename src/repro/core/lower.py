@@ -151,6 +151,25 @@ class ExecPlan:
     def reasons(self) -> Tuple[str, ...]:
         return tuple(f.reason for f in self.fallbacks)
 
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-able form for traces / run reports (the mesh view is
+        summarized by its axis splits; tuple kwargs become lists)."""
+        return {
+            "mode": self.mode,
+            "requested": self.requested,
+            "grid": list(self.grid),
+            "shape": list(self.shape),
+            "axes": dict(self.axes),
+            "kwargs": {k: (list(v) if isinstance(v, tuple) else v)
+                       for k, v in self.kwargs.items()},
+            "view": ({ax: [list(sub) for sub in subs]
+                      for ax, subs in self.view.splits}
+                     if self.view is not None else None),
+            "degraded": self.degraded,
+            "fallbacks": [{"reason": f.reason, "from": f.from_mode,
+                           "to": f.to_mode} for f in self.fallbacks],
+        }
+
     def describe(self) -> str:
         chain = " ".join(f.describe() for f in self.fallbacks)
         gm, gn, gk = self.grid

@@ -169,6 +169,12 @@ class DeploymentPlan:
     def from_json(cls, text: str) -> "DeploymentPlan":
         return cls.from_dict(json.loads(text))
 
+    def digest(self) -> str:
+        """Stable id of this exact plan (schedule + report + provenance) —
+        recorded in dispatch spans / run reports so a serve trace can be
+        matched to the persisted artifact that produced it."""
+        return hashlib.sha256(self.to_json().encode()).hexdigest()[:12]
+
     def valid_for(self, hw: AcceleratorConfig) -> bool:
         return self.hw_digest == hw_fingerprint(hw)
 

@@ -35,6 +35,13 @@ persisted into --plan-cache, the warm-up tunes with the measured cost
 model, and the JSON gains a 'calibration' section (fit quality + how many
 of this cell's tuning decisions the calibration flipped). See
 docs/plan-lifecycle.md "Calibration".
+
+With --plan-cache the cell additionally installs the structured dispatch
+tracer (repro.obs) and writes, next to the cell JSON: <tag>.run_report.json
+(the versioned machine-readable report CI asserts on — routing counters,
+per-dispatch plan provenance, workload coverage, calibration fit,
+predicted-vs-measured drift) and <tag>.trace.json (Chrome trace-event
+spans, loadable at ui.perfetto.dev). See docs/observability.md.
 """
 import argparse
 import dataclasses
@@ -238,12 +245,17 @@ def calibrate_plan_cache(plan_cache: str, plan_grid, reps: int = 1
             f"measurement mesh); got {rows}x{cols}")
     hw = tpu_pod_as_accelerator(tuple(plan_grid))
     mesh = jax.make_mesh(tuple(plan_grid), ("data", "model"))
+    # the profile persisted by the PREVIOUS calibration run (if any): the
+    # fresh measurements below, compared against ITS predictions, quantify
+    # how far the machine drifted since it was fitted
+    prior = cal.load_profile(plan_cache, hw)
     t0 = time.time()
     profile, samples = cal.calibrate_mesh(hw, mesh, reps=reps)
     path = cal.save_profile(plan_cache, profile)
+    cal.save_samples(plan_cache, profile.hw_digest, samples)
     print(f"calibration: {profile.describe()} from {len(samples)} "
           f"measurements in {time.time()-t0:.1f}s -> {path}", flush=True)
-    return {
+    out = {
         "profile": profile.to_dict(),
         "profile_digest": profile.digest(),
         "samples": len(samples),
@@ -252,6 +264,12 @@ def calibrate_plan_cache(plan_cache: str, plan_grid, reps: int = 1
         "rank_agreement_after": profile.rank_agreement_after,
         "picks_measured_ratio": profile.picks_measured_ratio,
     }
+    if prior is not None:
+        from repro.obs import DriftMonitor
+        mon = DriftMonitor(prior)
+        mon.add_samples(samples)
+        out["drift_vs_prior"] = mon.summary()
+    return out
 
 
 def calibration_rank_flips(planner, workload) -> Dict[str, Any]:
@@ -307,6 +325,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     shard_ctx.set_mesh(mesh)   # pin activation layouts during tracing
     gemm_ctx = None
     calibration_out = None
+    if plan_cache:
+        # structured dispatch tracer: every pmm the cell traces emits a
+        # provenance span; main() exports <tag>.trace.json + the run report
+        from repro.obs import Tracer, set_tracer
+        set_tracer(Tracer(process_name=f"dryrun.{arch}.{shape_name}"))
     if calibrate:
         # fit + persist BEFORE the planner is built so the warm-up below
         # already tunes with the measured cost model
@@ -410,6 +433,22 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 "fallback": st.fallback,
                 "resolve_rate": st.resolve_rate,
             }
+
+    if plan_cache:
+        # predicted-vs-measured drift of the persisted calibration profile
+        # against the persisted measurement samples (written next to it by
+        # --calibrate; present on this run when --calibrate just ran, or
+        # from an earlier calibration of the same cache dir)
+        from repro.hw.config import tpu_pod_as_accelerator
+        from repro.obs import DriftMonitor
+        from repro.sim import calibrate as cal
+        hw_pod = tpu_pod_as_accelerator(tuple(plan_grid))
+        profile = cal.load_profile(plan_cache, hw_pod)
+        samples = cal.load_samples(plan_cache, hw_pod)
+        if profile is not None and samples:
+            mon = DriftMonitor(profile)
+            mon.add_samples(samples)
+            out["drift"] = mon.summary()
 
     # 2. accounting configs for the roofline terms
     if not skip_accounting:
@@ -525,6 +564,32 @@ def main():
                   "traceback": traceback.format_exc()[-3000:]}
     with open(path, "w") as f:
         json.dump(result, f, indent=1)
+
+    # observability artifacts alongside the cell JSON: the versioned run
+    # report (what CI asserts on) + the Perfetto-loadable dispatch trace.
+    # launch/report.py skips both suffixes when globbing cells.
+    from repro.models import shard_ctx
+    from repro.obs import build_run_report, get_tracer, write_run_report
+    ctx = shard_ctx.get_gemm_context()
+    tracer = get_tracer()
+    if ctx is not None or tracer is not None:
+        run_report = build_run_report(
+            "dryrun",
+            stats=ctx.stats.to_dict() if ctx is not None else None,
+            workload=result.get("workload"),
+            drift=result.get("drift"),
+            calibration=result.get("calibration"),
+            tracer=tracer,
+            extra={"arch": args.arch, "shape": args.shape,
+                   "multi_pod": args.multi_pod, "routed": args.route,
+                   "status": result["status"]})
+        rr_path = write_run_report(
+            os.path.join(args.out, tag + ".run_report.json"), run_report)
+        print(f"run report -> {rr_path}")
+        if tracer is not None:
+            print(f"trace -> "
+                  f"{tracer.write(os.path.join(args.out, tag + '.trace.json'))}")
+
     print(json.dumps({k: v for k, v in result.items() if k != "traceback"},
                      indent=1))
     if result["status"] != "ok":

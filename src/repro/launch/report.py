@@ -14,6 +14,9 @@ from typing import Dict, List
 def load(out: str) -> Dict[str, dict]:
     cells = {}
     for path in sorted(glob.glob(os.path.join(out, "*.json"))):
+        # observability sidecars live next to the cells; they are not cells
+        if path.endswith((".run_report.json", ".trace.json")):
+            continue
         with open(path) as f:
             r = json.load(f)
         key = f"{r.get('arch')}|{r.get('shape')}|{'mp' if r.get('multi_pod') else 'sp'}"
@@ -44,13 +47,27 @@ def dryrun_table(cells: Dict[str, dict]) -> List[str]:
 
 
 def roofline_table(cells: Dict[str, dict]) -> List[str]:
+    """Single-pod roofline rows + an explicit tally of every cell left out.
+
+    A skipped cell used to vanish without a trace, so a failed or
+    roofline-less run silently shrank the table; now the reasons are
+    counted and appended as a visible note."""
     rows = ["| arch | shape | compute s | memory s | collective s | dominant | "
             "roofline frac | MODEL/HLO | bottleneck note |",
             "|---|---|---|---|---|---|---|---|---|"]
+    skipped: Dict[str, int] = {}
     for key in sorted(cells):
         r = cells[key]
         arch, shape, m = key.split("|")
-        if m != "sp" or r.get("status") != "ok" or "roofline" not in r:
+        if m != "sp":
+            skipped["multi-pod"] = skipped.get("multi-pod", 0) + 1
+            continue
+        if r.get("status") != "ok":
+            skipped["not-ok"] = skipped.get("not-ok", 0) + 1
+            continue
+        if "roofline" not in r:
+            skipped["no-roofline-section"] = \
+                skipped.get("no-roofline-section", 0) + 1
             continue
         rf, acc = r["roofline"], r["accounting"]
         dom = rf["dominant"].replace("_s", "")
@@ -63,6 +80,10 @@ def roofline_table(cells: Dict[str, dict]) -> List[str]:
             f"| {arch} | {shape} | {rf['compute_s']:.3f} | {rf['memory_s']:.3f} | "
             f"{rf['collective_s']:.3f} | {dom} | {rf['roofline_fraction']:.3f} | "
             f"{acc['useful_ratio']:.2f} | {note} |")
+    if skipped:
+        parts = ", ".join(f"{n} {reason}"
+                          for reason, n in sorted(skipped.items()))
+        rows.append(f"\n{sum(skipped.values())} cell(s) not shown: {parts}")
     return rows
 
 

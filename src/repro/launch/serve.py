@@ -28,6 +28,9 @@ from repro.deploy.warmup import add_plan_args, build_planner, warm_buckets
 from repro.launch.mesh import make_host_mesh
 from repro.models import shard_ctx
 from repro.models.model import decode_init, decode_step, forward, init_params
+from repro.obs import (DriftMonitor, Tracer, build_run_report,
+                       render_run_report, set_tracer, write_run_report)
+from repro.obs.trace import maybe_span
 from repro.train.steps import make_serve_step
 
 
@@ -62,29 +65,56 @@ def install_gemm_context(planner: Planner) -> shard_ctx.GemmContext:
     return ctx
 
 
-def report_routing(ctx: shard_ctx.GemmContext, cfg, batch: int,
-                   max_len: int) -> None:
-    """Shutdown report: plan hit rate + model_workload cross-validation.
+def load_drift(plan_cache: str, plan_grid) -> dict:
+    """Drift of the persisted calibration profile vs its persisted
+    measurement samples (both written by `dryrun --calibrate` next to the
+    plans), or None when the cache dir carries no calibration."""
+    from repro.hw.config import tpu_pod_as_accelerator
+    from repro.sim import calibrate as cal
+    hw = tpu_pod_as_accelerator(tuple(plan_grid))
+    profile = cal.load_profile(plan_cache, hw)
+    samples = cal.load_samples(plan_cache, hw)
+    if profile is None or not samples:
+        return None
+    mon = DriftMonitor(profile)
+    mon.add_samples(samples)
+    return mon.summary()
 
-    The prediction is the decode workload only: this launcher prefills
-    token-by-token through the cache, so every executed step is a
+
+def build_serve_report(ctx: shard_ctx.GemmContext, cfg, batch: int,
+                       max_len: int, plan_cache: str = "",
+                       plan_grid=(4, 4), tracer=None) -> dict:
+    """The versioned run report: routing stats + model_workload
+    cross-validation + calibration drift + per-dispatch provenance.
+
+    The coverage prediction is the decode workload only: this launcher
+    prefills token-by-token through the cache, so every executed step is a
     decode-shaped trace (M = batch). The batched-prefill shapes warmed at
     startup are a cache artifact for real deployments, not something this
     loop runs — comparing against them would report phantom gaps."""
     stats = ctx.stats
-    print(f"plan routing: {stats.describe()}")
-    if stats.modes:
-        print(f"lowered modes: {dict(sorted(stats.modes.items()))}")
-    if stats.degrades or stats.silent_degrades:
-        print(f"routing degrades (by reason): "
-              f"{dict(sorted(stats.degrades.items()))} "
-              f"silent-auto={stats.silent_degrades}")
     predicted = model_workload(cfg, batch, max_len, kind="decode")
     cov = workload_coverage(predicted, stats.observed_shapes())
-    print(f"workload cross-validation: model_workload predicted "
-          f"{cov['covered']:.0%} of the {len(stats.observed_shapes())} "
-          f"executed GEMM shapes ({len(cov['extra'])} unpredicted, "
-          f"{len(cov['missing'])} predicted-but-unexecuted)")
+    workload = {
+        "observed": len(stats.observed_shapes()),
+        "predicted": len(predicted),
+        "covered": cov["covered"],
+        "extra": [[s.m, s.n, s.k] for s in cov["extra"]],
+        "missing": [[s.m, s.n, s.k] for s in cov["missing"]],
+    }
+    drift = load_drift(plan_cache, plan_grid) if plan_cache else None
+    return build_run_report("serve", stats=stats.to_dict(),
+                            workload=workload, drift=drift, tracer=tracer,
+                            extra={"arch": cfg.name, "batch": batch,
+                                   "max_len": max_len})
+
+
+def report_routing(ctx: shard_ctx.GemmContext, cfg, batch: int,
+                   max_len: int) -> None:
+    """Shutdown print, rendered from the same dict the run report writes."""
+    for line in render_run_report(build_serve_report(ctx, cfg, batch,
+                                                     max_len)):
+        print(line)
 
 
 def main():
@@ -97,6 +127,11 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--no-plan-routing", action="store_true",
                     help="warm the cache but keep matmuls un-routed")
+    ap.add_argument("--run-report", default="results/serve_run_report.json",
+                    help="where to write the versioned run report "
+                         "('' disables)")
+    ap.add_argument("--trace", default="",
+                    help="write a Perfetto-loadable Chrome trace here")
     add_plan_args(ap)
     args = ap.parse_args()
 
@@ -107,12 +142,15 @@ def main():
 
     max_len = args.prompt_len + args.gen
     gemm_ctx = None
+    tracer = None
     if not args.skip_plan_warmup:
         planner = warm_plan_cache(cfg, args.batch, args.prompt_len, max_len,
                                   args.plan_cache, args.plan_grid,
                                   args.plan_candidates)
         if not args.no_plan_routing:
             gemm_ctx = install_gemm_context(planner)
+            tracer = Tracer(process_name=f"serve.{cfg.name}")
+            set_tracer(tracer)
     caches = decode_init(params, cfg, args.batch, max_len)
     serve = jax.jit(make_serve_step(cfg))
 
@@ -128,8 +166,9 @@ def main():
     t0 = time.time()
     logits = None
     for i in range(args.prompt_len):
-        logits, caches = serve(params, caches, prompts[:, i:i + 1],
-                               jnp.asarray(i), **enc_kwargs)
+        with maybe_span("serve.prefill_token", position=i):
+            logits, caches = serve(params, caches, prompts[:, i:i + 1],
+                                   jnp.asarray(i), **enc_kwargs)
     t_prefill = time.time() - t0
 
     generated = []
@@ -137,8 +176,10 @@ def main():
     t0 = time.time()
     for i in range(args.gen):
         generated.append(np.asarray(tok)[:, 0])
-        logits, caches = serve(params, caches, tok,
-                               jnp.asarray(args.prompt_len + i), **enc_kwargs)
+        with maybe_span("serve.decode_token", position=i):
+            logits, caches = serve(params, caches, tok,
+                                   jnp.asarray(args.prompt_len + i),
+                                   **enc_kwargs)
         if args.temperature > 0:
             key, sub = jax.random.split(key)
             tok = jax.random.categorical(
@@ -156,7 +197,17 @@ def main():
     for row in gen[:2]:
         print(" ", row[:16].tolist())
     if gemm_ctx is not None:
-        report_routing(gemm_ctx, cfg, args.batch, max_len)
+        report = build_serve_report(gemm_ctx, cfg, args.batch, max_len,
+                                    plan_cache=args.plan_cache,
+                                    plan_grid=args.plan_grid, tracer=tracer)
+        for line in render_run_report(report):
+            print(line)
+        if args.run_report:
+            write_run_report(args.run_report, report)
+            print(f"run report: {args.run_report}")
+        if args.trace and tracer is not None:
+            tracer.write(args.trace)
+            print(f"chrome trace: {args.trace}")
 
 
 if __name__ == "__main__":

@@ -30,6 +30,8 @@ from repro.ft.runtime import LoopConfig, run_training
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import shard_ctx
 from repro.models.model import init_params
+from repro.obs import (Tracer, build_run_report, render_run_report,
+                       set_tracer, write_run_report)
 from repro.optim import adamw, compress
 from repro.parallel.spec_rules import param_shardings
 from repro.train.steps import make_train_step
@@ -50,6 +52,11 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--run-report", default="results/train_run_report.json",
+                    help="where to write the versioned run report "
+                         "('' disables)")
+    ap.add_argument("--trace", default="",
+                    help="write a Perfetto-loadable Chrome trace here")
     from repro.deploy.warmup import add_plan_args
     add_plan_args(ap)
     args = ap.parse_args()
@@ -62,6 +69,7 @@ def main():
         shard_ctx.set_mesh(mesh)
 
     gemm_ctx = None
+    tracer = None
     if not args.skip_plan_warmup:
         from repro.deploy import model_workload
         from repro.deploy.warmup import build_planner, warm_buckets
@@ -82,6 +90,8 @@ def main():
         planner.batch_tune(workload, allow_bucketed=True)
         gemm_ctx = shard_ctx.GemmContext(mesh=mesh, planner=planner)
         shard_ctx.set_gemm_context(gemm_ctx)
+        tracer = Tracer(process_name=f"train.{cfg.name}")
+        set_tracer(tracer)
 
     opt = adamw.AdamWConfig(lr=args.lr, warmup_steps=max(5, args.steps // 20),
                             total_steps=args.steps)
@@ -120,7 +130,21 @@ def main():
                                               for k, v in b.items()},
                  on_metrics=on_metrics)
     if gemm_ctx is not None:
-        print(f"plan routing: {gemm_ctx.stats.describe()}")
+        from repro.launch.serve import load_drift
+        drift = load_drift(args.plan_cache, args.plan_grid)
+        report = build_run_report(
+            "train", stats=gemm_ctx.stats.to_dict(), drift=drift,
+            tracer=tracer,
+            extra={"arch": cfg.name, "steps": args.steps,
+                   "batch": args.batch, "seq": args.seq})
+        for line in render_run_report(report):
+            print(line)
+        if args.run_report:
+            write_run_report(args.run_report, report)
+            print(f"run report: {args.run_report}")
+        if args.trace and tracer is not None:
+            tracer.write(args.trace)
+            print(f"chrome trace: {args.trace}")
     print("done.")
 
 

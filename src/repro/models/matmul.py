@@ -29,12 +29,14 @@ plans pmm consults are produced, cached, and refined).
 from __future__ import annotations
 
 import math
+import time
 from typing import Optional
 
 import jax
 
 from repro.core.schedule import GEMMShape
 from repro.models import shard_ctx
+from repro.obs import trace as obs_trace
 
 
 def _gemm_shape(x: jax.Array, w: jax.Array) -> GEMMShape:
@@ -75,6 +77,55 @@ def lookup_plan(planner, shape: GEMMShape):
     return plan, kind
 
 
+def _dispatch_routed(ctx, x: jax.Array, w: jax.Array, shape: GEMMShape,
+                     prov: dict, tracer) -> jax.Array:
+    """The routed dispatch: plan consult -> lowering -> dit_gemm.
+
+    `prov` is the span's provenance record (also lifted into the run
+    report): plan-resolve latency, hit/bucketed/fallback classification,
+    plan + calibration digests, the resolved mode with its fallback-reason
+    chain, and the plan's predicted cost. Digests are only computed when a
+    tracer is installed — they serialize the plan, which the untraced
+    dispatch path must not pay for.
+    """
+    from repro.core.gemm import dit_gemm   # lazy: keep import cycles at bay
+    plan, kind = None, None
+    if ctx.planner is not None:
+        t0 = time.perf_counter()
+        plan, kind = lookup_plan(ctx.planner, shape)
+        resolve_us = (time.perf_counter() - t0) * 1e6
+        prov["plan_resolve_us"] = round(resolve_us, 1)
+        if tracer is not None:
+            tracer.metrics.observe("pmm.plan_resolve_us", resolve_us)
+        if kind == "hit":
+            ctx.stats.hits += 1
+        elif kind == "bucketed":
+            ctx.stats.bucketed += 1
+    if plan is None:
+        ctx.stats.fallback += 1
+        prov.update(provenance="fallback", mode="auto")
+        return dit_gemm(x, w, ctx.mesh, mode="auto", row_axis=ctx.row_axis,
+                        col_axis=ctx.col_axis)
+    # lower the tuned schedule here (not inside dit_gemm) so the resolved
+    # mode and any fallback reasons land in the context stats — launchers
+    # report WHY routing degraded, not just that it did
+    from repro.core.lower import lower_schedule
+    exec_plan = lower_schedule(getattr(plan, "schedule", plan), ctx.mesh,
+                               ctx.row_axis, ctx.col_axis, shape=shape)
+    ctx.stats.record_lowering(exec_plan)
+    prov.update(provenance=kind, mode=exec_plan.mode,
+                reasons=list(exec_plan.reasons()))
+    report = getattr(plan, "report", None)
+    if report is not None:
+        prov["predicted_s"] = report.total_time
+    if tracer is not None:
+        if hasattr(plan, "digest"):
+            prov["plan_digest"] = plan.digest()
+        prov["calibration_digest"] = getattr(plan, "calibration_digest", "")
+    return dit_gemm(x, w, ctx.mesh, row_axis=ctx.row_axis,
+                    col_axis=ctx.col_axis, exec_plan=exec_plan)
+
+
 def pmm(x: jax.Array, w: jax.Array, tag: str = "") -> jax.Array:
     """Plan-routed `x @ w`. x: (..., K); w: (K, N) -> (..., N)."""
     ctx = shard_ctx.get_gemm_context()
@@ -85,27 +136,28 @@ def pmm(x: jax.Array, w: jax.Array, tag: str = "") -> jax.Array:
         return x @ w
     shape = _gemm_shape(x, w)
     ctx.stats.record(tag, shape)
+    tracer = obs_trace.get_tracer()
     if ctx.mesh is None:
         ctx.stats.unrouted += 1
+        if tracer is not None:
+            tracer.instant(f"pmm.{tag or 'untagged'}", tag=tag,
+                           shape=[shape.m, shape.n, shape.k],
+                           provenance="unrouted")
+            tracer.metrics.counter("pmm.provenance.unrouted").inc()
         return x @ w
-    from repro.core.gemm import dit_gemm   # lazy: keep import cycles at bay
-    plan = None
-    if ctx.planner is not None:
-        plan, kind = lookup_plan(ctx.planner, shape)
-        if kind == "hit":
-            ctx.stats.hits += 1
-        elif kind == "bucketed":
-            ctx.stats.bucketed += 1
-    if plan is None:
-        ctx.stats.fallback += 1
-        return dit_gemm(x, w, ctx.mesh, mode="auto", row_axis=ctx.row_axis,
-                        col_axis=ctx.col_axis)
-    # lower the tuned schedule here (not inside dit_gemm) so the resolved
-    # mode and any fallback reasons land in the context stats — launchers
-    # report WHY routing degraded, not just that it did
-    from repro.core.lower import lower_schedule
-    exec_plan = lower_schedule(getattr(plan, "schedule", plan), ctx.mesh,
-                               ctx.row_axis, ctx.col_axis, shape=shape)
-    ctx.stats.record_lowering(exec_plan)
-    return dit_gemm(x, w, ctx.mesh, row_axis=ctx.row_axis,
-                    col_axis=ctx.col_axis, exec_plan=exec_plan)
+    if tracer is None:
+        return _dispatch_routed(ctx, x, w, shape, {}, None)
+    # spans measure the TRACE-TIME dispatch cost (shapes are static under
+    # jit: plan consult + lowering + shard_map tracing happen once per
+    # callsite per trace, never per executed step)
+    t0 = time.perf_counter()
+    with tracer.span(f"pmm.{tag or 'untagged'}", cat=obs_trace.CAT_PMM,
+                     tag=tag, shape=[shape.m, shape.n, shape.k]) as prov:
+        out = _dispatch_routed(ctx, x, w, shape, prov, tracer)
+    dispatch_us = (time.perf_counter() - t0) * 1e6
+    tracer.metrics.counter(f"pmm.provenance.{prov['provenance']}").inc()
+    tracer.metrics.observe(
+        f"pmm.dispatch_us.mode.{prov.get('mode', 'auto')}", dispatch_us)
+    tracer.metrics.observe(
+        f"pmm.dispatch_us.tag.{tag or 'untagged'}", dispatch_us)
+    return out

@@ -103,17 +103,51 @@ class GemmStats:
         """Deduplicated GEMMShapes the model actually traced."""
         return list(dict.fromkeys(shape for (_, shape) in self.observed))
 
+    def to_dict(self) -> Dict[str, object]:
+        """JSON-able snapshot — the run report's `routing` section.
+
+        Counters plus derived summaries (`calls`, `routed`, `resolve_rate`)
+        so report consumers never recompute them, and the observed
+        (tag, shape) workload as a stable list. `from_dict` round-trips it.
+        """
+        return {
+            "calls": self.routed + self.unrouted,
+            "routed": self.routed,
+            "hits": self.hits,
+            "bucketed": self.bucketed,
+            "fallback": self.fallback,
+            "unrouted": self.unrouted,
+            "resolve_rate": self.resolve_rate,
+            "modes": dict(sorted(self.modes.items())),
+            "degrades": dict(sorted(self.degrades.items())),
+            "silent_degrades": self.silent_degrades,
+            "observed": [
+                {"tag": tag,
+                 "shape": ([int(s.m), int(s.n), int(s.k)]
+                           if hasattr(s, "m") else list(s)),
+                 "count": count}
+                for (tag, s), count in self.observed.items()],
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "GemmStats":
+        """Rebuild a stats object from `to_dict()` output (derived fields
+        like `calls`/`routed`/`resolve_rate` are recomputed, not read)."""
+        from repro.core.schedule import GEMMShape
+        stats = cls(hits=int(d["hits"]), bucketed=int(d["bucketed"]),
+                    fallback=int(d["fallback"]), unrouted=int(d["unrouted"]),
+                    modes=dict(d.get("modes", {})),
+                    degrades=dict(d.get("degrades", {})),
+                    silent_degrades=int(d.get("silent_degrades", 0)))
+        for rec in d.get("observed", []):
+            key = (rec["tag"], GEMMShape(*rec["shape"]))
+            stats.observed[key] = int(rec["count"])
+        return stats
+
     def describe(self) -> str:
-        out = (f"pmm calls={self.routed + self.unrouted} routed={self.routed} "
-               f"(hits={self.hits} bucketed={self.bucketed} "
-               f"fallback={self.fallback}) unrouted={self.unrouted} "
-               f"plan-resolve-rate={self.resolve_rate:.0%}")
-        if self.modes:
-            out += f" modes={dict(sorted(self.modes.items()))}"
-        if self.degrades or self.silent_degrades:
-            out += (f" degrades={dict(sorted(self.degrades.items()))} "
-                    f"silent={self.silent_degrades}")
-        return out
+        # render from the dict so the print and the run report cannot drift
+        from repro.obs.report import describe_routing
+        return describe_routing(self.to_dict())
 
 
 @dataclasses.dataclass

@@ -330,6 +330,52 @@ def save_profile(cache_dir: str, profile: CalibrationProfile) -> str:
     return path
 
 
+def _samples_path(cache_dir: str, hw_digest: str) -> str:
+    return os.path.join(cache_dir, f"calibration_{hw_digest}.samples.json")
+
+
+def save_samples(cache_dir: str, hw_digest: str,
+                 samples: Sequence[CalibrationSample]) -> str:
+    """Persist the measurements a profile was fitted from, next to it.
+
+    The persisted samples let a later run compute predicted-vs-measured
+    drift (`repro.obs.drift.DriftMonitor`) against the persisted profile
+    WITHOUT re-running the measurement harness — serve/dryrun report drift
+    from the calibration run's ground truth."""
+    os.makedirs(cache_dir, exist_ok=True)
+    path = _samples_path(cache_dir, hw_digest)
+    doc = {"schema_version": PROFILE_SCHEMA_VERSION, "hw_digest": hw_digest,
+           "samples": [s.to_dict() for s in samples]}
+    fd, tmp = tempfile.mkstemp(dir=cache_dir, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    return path
+
+
+def load_samples(cache_dir: str,
+                 hw: AcceleratorConfig) -> List[CalibrationSample]:
+    """The persisted samples for `hw`, or [] (missing / corrupt /
+    incompatible schema / fingerprint mismatch are all misses)."""
+    from repro.deploy.plan import hw_fingerprint
+    digest = hw_fingerprint(hw)
+    path = _samples_path(cache_dir, digest)
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+        if (doc.get("schema_version") != PROFILE_SCHEMA_VERSION
+                or doc.get("hw_digest") != digest):
+            return []
+        return [CalibrationSample.from_dict(d) for d in doc["samples"]]
+    except (OSError, ValueError, KeyError, TypeError):
+        return []
+
+
 def load_profile(cache_dir: str,
                  hw: AcceleratorConfig) -> Optional[CalibrationProfile]:
     """The persisted profile for `hw`, or None (missing / corrupt /

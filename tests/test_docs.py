@@ -75,6 +75,7 @@ def test_calibrate_flag_exists_and_is_documented():
 @pytest.mark.parametrize("section", [
     "## BENCH_routing.json",
     "## BENCH_calibration.json",
+    "## BENCH_tracing.json",
 ])
 def test_bench_artifact_sections_present(section):
     """CI's assertions reference these artifacts by name; the schema doc
@@ -92,6 +93,46 @@ def test_calibration_schema_fields_documented(field):
     assert field in _read(BENCHMARKING_MD), (
         f"BENCH_calibration.json field {field!r} is asserted by CI but "
         f"missing from docs/benchmarking.md")
+
+
+# -- observability surface: CLI flags + schema names stay documented --
+
+OBSERVABILITY_MD = os.path.join(ROOT, "docs", "observability.md")
+SERVE_PY = os.path.join(ROOT, "src", "repro", "launch", "serve.py")
+
+
+def test_run_report_flag_exists_and_is_documented():
+    """`--run-report` must exist in serve's CLI and be documented where a
+    degrade report sends readers (docs/observability.md)."""
+    assert '"--run-report"' in _read(SERVE_PY), (
+        "serve lost its --run-report flag; update docs + CI if renamed")
+    text = _read(OBSERVABILITY_MD)
+    for needle in ("--run-report", "--trace"):
+        assert needle in text, (
+            f"docs/observability.md no longer documents {needle}")
+
+
+@pytest.mark.parametrize("field", [
+    # the run-report keys CI asserts on / launchers render from
+    "schema_version", "silent_degrades", "resolve_rate", "dispatches",
+    "plan_digest", "calibration_digest", "plan_resolve_us", "provenance",
+    # the drift-summary keys the staleness decision hangs on
+    "profile_stale", "geomean_ratio", "drift_distance",
+    "DRIFT_STALE_THRESHOLD",
+])
+def test_observability_schema_fields_documented(field):
+    assert field in _read(OBSERVABILITY_MD), (
+        f"run-report/span field {field!r} is part of the observability "
+        f"contract but missing from docs/observability.md")
+
+
+def test_drift_threshold_value_matches_doc():
+    """The documented threshold must be the shipped constant."""
+    from repro.obs import DRIFT_STALE_THRESHOLD
+    assert f"DRIFT_STALE_THRESHOLD = {DRIFT_STALE_THRESHOLD}" in \
+        _read(OBSERVABILITY_MD), (
+            "docs/observability.md documents a different drift threshold "
+            "than obs.drift ships")
 
 
 def test_plan_lifecycle_documents_calibration_stage():

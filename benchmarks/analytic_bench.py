@@ -1,0 +1,169 @@
+"""Analytic-shortlist rank agreement benchmark -> BENCH_analytic.json.
+
+The gate for `repro.core.analytic` — the closed-form candidate generator the
+planner's online-tuning path trusts on every `plan_cached` miss. Three
+suites, each a dense GEMMShape grid compared against the exhaustive
+`core.autotuner.tune` optimum:
+
+- **mini_identity**: the mini accelerator under the analytical prior.
+  Asserted: top-1 agreement >= 0.9, shortlist-best cost <= 1.05x optimum
+  everywhere, mean shortlist generation < 1 ms (worst shape < 2.5 ms).
+- **mini_calibrated**: same grid under a trusted CalibrationProfile (scaled
+  compute/DMA/NoC terms — the regime a fitted profile puts the ranking in,
+  which also widens the search space to the hierarchical dataflows).
+  Asserted with the same bounds — the generator must track the objective it
+  is derived from, not just the default one.
+- **pod_identity**: the tpu-pod-view accelerator (the deploy layer's
+  serving hardware) — a stress suite over a different engine geometry and
+  element width. Reported with a looser top-1 floor (the DMA-bound corner
+  of this machine misranks inside the shortlist's tie band) but the SAME
+  <=1.05x cost-ratio bound: even a top-1 miss must cost within 5% of the
+  optimum.
+
+The result JSON carries per-suite summaries + per-shape records and a
+`within_bounds` flag; the bench raises when any bound is violated, so both
+standalone runs and CI catch a regression without parsing the numbers.
+
+  PYTHONPATH=src python benchmarks/analytic_bench.py
+
+Pure cost-model arithmetic — no jax, no devices. The exhaustive baseline
+dominates the runtime (seconds per shape at --max-exhaustive 256); the
+shortlist side is the microseconds being measured.
+"""
+import argparse
+import json
+from typing import List
+
+# Asserted bounds (mini suites). POD is a stress suite: the cost-ratio and
+# generation-latency bounds still bind, the top-1 floor is looser.
+# Generation latency is bounded on the MEAN (the sub-millisecond claim:
+# amortized shortlist derivation per serving miss) with a separate tail
+# guard on the worst shape — a full 32-candidate shortlist costs ~2.5k
+# Python calls, so the per-shape max tracks interpreter dispatch, not
+# algorithmic regressions.
+TOP1_BOUND = 0.90
+COST_RATIO_BOUND = 1.05
+MEAN_GEN_US_BOUND = 1000.0
+MAX_GEN_US_BOUND = 2500.0
+POD_TOP1_FLOOR = 0.60
+
+
+def _mini_hw():
+    from repro.hw.config import (AcceleratorConfig, HBMConfig, NoCConfig,
+                                 TileConfig)
+    return AcceleratorConfig(name="mini", grid=(4, 4),
+                             tile=TileConfig(l1_bytes=4 * 1024 * 1024),
+                             noc=NoCConfig(), hbm=HBMConfig(n_channels=8))
+
+
+def _mini_profile(hw):
+    """A trusted profile with deliberately skewed terms: compute priced up,
+    DMA down, NoC up — enough to flip winners (fp32 accumulators and
+    degenerate grids start paying off), so agreement under it is a real
+    test of calibrated derivation, not a repeat of the identity suite."""
+    from repro.deploy.plan import hw_fingerprint
+    from repro.sim.calibrate import CalibrationProfile
+    return CalibrationProfile(hw_name=hw.name, hw_digest=hw_fingerprint(hw),
+                              compute_scale=1.35, dma_scale=0.8,
+                              noc_scale=1.25, step_overhead_s=1e-6,
+                              n_samples=12, r2=0.97, fit_ok=True)
+
+
+def _suites(max_exhaustive: int):
+    from repro.core.schedule import GEMMShape
+    from repro.hw.config import tpu_pod_as_accelerator
+    mini = _mini_hw()
+    pod = tpu_pod_as_accelerator((4, 4))
+    mini_grid = [GEMMShape(m, n, k)
+                 for m in (256, 512, 1024, 4096)
+                 for n in (256, 1024, 4096)
+                 for k in (256, 1024, 8192)]
+    pod_grid = [GEMMShape(m, n, k)
+                for m in (512, 2048, 8192)
+                for n in (1024, 4096)
+                for k in (1024, 8192)]
+    return [
+        {"suite": "mini_identity", "hw": mini, "shapes": mini_grid,
+         "elem_bytes": 1, "calibration": None, "top1_bound": TOP1_BOUND},
+        {"suite": "mini_calibrated", "hw": mini, "shapes": mini_grid,
+         "elem_bytes": 1, "calibration": _mini_profile(mini),
+         "top1_bound": TOP1_BOUND},
+        {"suite": "pod_identity", "hw": pod, "shapes": pod_grid,
+         "elem_bytes": 2, "calibration": None, "top1_bound": POD_TOP1_FLOOR},
+    ]
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-exhaustive", type=int, default=256,
+                    help="exhaustive-search width the shortlist is judged "
+                         "against (the runtime knob: seconds per shape)")
+    ap.add_argument("--out", default="BENCH_analytic.json")
+    args = ap.parse_args(argv)
+
+    from repro.core.analytic import agreement_stats
+
+    result = {"max_exhaustive": args.max_exhaustive, "suites": {},
+              "bounds": {"top1_rate": TOP1_BOUND,
+                         "pod_top1_floor": POD_TOP1_FLOOR,
+                         "max_cost_ratio": COST_RATIO_BOUND,
+                         "mean_gen_us": MEAN_GEN_US_BOUND,
+                         "max_gen_us": MAX_GEN_US_BOUND}}
+    violations = []
+    for spec in _suites(args.max_exhaustive):
+        stats = agreement_stats(spec["shapes"], spec["hw"],
+                                elem_bytes=spec["elem_bytes"],
+                                calibration=spec["calibration"],
+                                max_exhaustive=args.max_exhaustive)
+        result["suites"][spec["suite"]] = stats
+        if stats["top1_rate"] < spec["top1_bound"]:
+            violations.append(f"{spec['suite']}: top1_rate="
+                              f"{stats['top1_rate']:.3f} "
+                              f"< {spec['top1_bound']}")
+        if stats["max_cost_ratio"] > COST_RATIO_BOUND:
+            violations.append(f"{spec['suite']}: max_cost_ratio="
+                              f"{stats['max_cost_ratio']:.4f} "
+                              f"> {COST_RATIO_BOUND}")
+        if stats["mean_gen_us"] >= MEAN_GEN_US_BOUND:
+            violations.append(f"{spec['suite']}: mean_gen_us="
+                              f"{stats['mean_gen_us']:.0f} "
+                              f">= {MEAN_GEN_US_BOUND}")
+        if stats["max_gen_us"] >= MAX_GEN_US_BOUND:
+            violations.append(f"{spec['suite']}: max_gen_us="
+                              f"{stats['max_gen_us']:.0f} "
+                              f">= {MAX_GEN_US_BOUND}")
+        print(f"analytic.{spec['suite']},{stats['mean_gen_us']},"
+              f"top1={stats['top1_rate']:.3f} "
+              f"max_ratio={stats['max_cost_ratio']:.4f} "
+              f"max_gen_us={stats['max_gen_us']:.0f} "
+              f"speedup_vs_exhaustive={stats['mean_speedup_vs_exhaustive']:.0f}x",
+              flush=True)
+    result["within_bounds"] = not violations
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"wrote {args.out}")
+    if violations:
+        raise SystemExit("analytic shortlist out of bounds: "
+                         + "; ".join(violations))
+    return result
+
+
+def run() -> List[str]:
+    """benchmarks/run.py hook — narrower exhaustive baseline keeps the CSV
+    sweep fast; the standalone/CI invocation owns the full-width gate."""
+    import contextlib
+    import io
+    import os
+    buf = io.StringIO()
+    try:
+        with contextlib.redirect_stdout(buf):
+            main(["--max-exhaustive", "64", "--out", os.devnull])
+    except SystemExit as e:
+        # run.py's per-module handler catches Exception, not SystemExit
+        raise RuntimeError(str(e))
+    return [l for l in buf.getvalue().splitlines()
+            if l.startswith("analytic.")]
+
+
+if __name__ == "__main__":
+    main()

@@ -7,10 +7,12 @@ the dry-run artifacts if present (results/dryrun). `routing_bench` also
 writes the BENCH_routing.json artifact (plan-resolve latency, per-mode
 trace+lower cost, per-mode execution efficiency vs XLA auto) and
 `calibration_bench` writes BENCH_calibration.json (cost-model fit quality,
-rank agreement, calibrated-vs-analytical pick quality) and `tracing_bench`
+rank agreement, calibrated-vs-analytical pick quality), `tracing_bench`
 writes BENCH_tracing.json (observability-layer overhead on the dispatch
-path, with asserted bounds) — every BENCH_* artifact's schema, production
-command, and regression meaning is documented in docs/benchmarking.md."""
+path, with asserted bounds) and `analytic_bench` writes BENCH_analytic.json
+(closed-form shortlist rank agreement vs exhaustive search, with asserted
+bounds) — every BENCH_* artifact's schema, production command, and
+regression meaning is documented in docs/benchmarking.md."""
 from __future__ import annotations
 
 import sys
@@ -19,7 +21,8 @@ import traceback
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import (calibration_bench, fig7_case_study, fig9_11_gh200,
+    from benchmarks import (analytic_bench, calibration_bench,
+                            fig7_case_study, fig9_11_gh200,
                             fig12_portability, microbench, plan_bench,
                             routing_bench, tracing_bench)
     modules = [
@@ -31,6 +34,7 @@ def main() -> None:
         ("routing", routing_bench),
         ("calibration", calibration_bench),
         ("tracing", tracing_bench),
+        ("analytic", analytic_bench),
     ]
     try:
         from benchmarks import roofline_table

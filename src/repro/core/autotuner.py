@@ -39,6 +39,15 @@ def default_dataflows(calibration=None) -> List[str]:
     return out
 
 
+# insight-score priority weight per dataflow (multiplied into the negated
+# utilization proxy below; smaller weight = enumerated/priced later). Shared
+# with the closed-form generator (core/analytic.py) so the two candidate
+# sources rank by the same prior.
+DATAFLOW_WEIGHT = {"summa": 1.0, "splitk_summa": 0.98, "systolic": 0.9,
+                   "systolic_over_summa": 0.92, "summa_over_systolic": 0.9,
+                   "baseline": 0.1}
+
+
 @dataclasses.dataclass
 class TunedResult:
     schedule: Schedule
@@ -66,6 +75,27 @@ def _engine_friendly(tn: int, hw: AcceleratorConfig) -> float:
     """Fraction of engine columns busy for an N-tile of size tn (alignment)."""
     cc = hw.tile.ce_cols
     return tn / (math.ceil(tn / cc) * cc)
+
+
+def insight_base(tm: int, tn: int, tk_eff: int,
+                 hw: AcceleratorConfig) -> float:
+    """Dataflow-independent part of the insight score: predicted engine
+    utilization = M/N alignment x K-pipeline ceiling TK/(TK+fill), negated
+    so lower = better. Split out so callers scoring one tile geometry
+    under several dataflows (core/analytic.py) pay for it once."""
+    fill = hw.tile.ce_rows + hw.tile.ce_cols
+    eff_m = tm / (math.ceil(tm / hw.tile.ce_rows) * hw.tile.ce_rows)
+    ceil_k = tk_eff / (tk_eff + fill)
+    return -(_engine_friendly(tn, hw) * eff_m * ceil_k)
+
+
+def insight_score(tm: int, tn: int, tk_eff: int, df: str,
+                  hw: AcceleratorConfig) -> float:
+    """Insight-based candidate priority (lower = better): `insight_base`
+    weighted by the dataflow prior. The closed-form generator
+    (core/analytic.py) ranks its shortlist by the same score, so the two
+    candidate sources agree on what 'promising' means."""
+    return insight_base(tm, tn, tk_eff, hw) * DATAFLOW_WEIGHT[df]
 
 
 def enumerate_candidates(shape: GEMMShape, hw: AcceleratorConfig,
@@ -135,26 +165,19 @@ def enumerate_candidates(shape: GEMMShape, hw: AcceleratorConfig,
                                 continue
                             if df in ("systolic_over_summa",
                                       "summa_over_systolic") \
-                                    and (gm % 2 or gn % 2):
+                                    and (gm % 2 or gn % 2
+                                         or (shape.k // tk_eff) % 2):
                                 # hierarchical candidates use the paper's
                                 # square (2, 2) inner group, which must
-                                # divide the logical grid
+                                # divide the logical grid AND the K-step
+                                # count (every such candidate previously
+                                # died at build time during pricing)
                                 continue
-                            # insight-based priority scoring (lower = better):
-                            # predicted engine utilization = M/N alignment x
-                            # K-pipeline ceiling TK/(TK+fill) — iteration 8 of
-                            # §Perf: the ceiling term is what surfaces deep-TK
+                            # insight-based priority scoring (lower =
+                            # better) — iteration 8 of §Perf: the K-pipeline
+                            # ceiling term is what surfaces deep-TK
                             # schedules that tile-size-only scoring missed.
-                            fill = hw.tile.ce_rows + hw.tile.ce_cols
-                            eff_m = tm / (math.ceil(tm / hw.tile.ce_rows)
-                                          * hw.tile.ce_rows)
-                            ceil_k = tk_eff / (tk_eff + fill)
-                            score = -(_engine_friendly(tn, hw) * eff_m * ceil_k)
-                            score *= {"summa": 1.0, "splitk_summa": 0.98,
-                                      "systolic": 0.9,
-                                      "systolic_over_summa": 0.92,
-                                      "summa_over_systolic": 0.9,
-                                      "baseline": 0.1}[df]
+                            score = insight_score(tm, tn, tk_eff, df, hw)
                             key = (gm, gn, gk, iter_m, iter_n, tk_eff, df,
                                    acc_bytes)
                             if key in seen:
@@ -169,6 +192,35 @@ def enumerate_candidates(shape: GEMMShape, hw: AcceleratorConfig,
     cands.sort(key=lambda sc: sc[0])
     for _, sched in cands[:max_candidates]:
         yield sched
+
+
+def price_candidates(candidates: Iterator[Schedule], hw: AcceleratorConfig,
+                     store_stage_options: Tuple[int, ...] = (1, 4),
+                     calibration=None
+                     ) -> Tuple[Optional[Tuple[float, Schedule, PerfReport]],
+                                List[Tuple[str, float, float]], int]:
+    """The shared pricing loop behind `tune` and `analytic.analytic_tune`:
+    build each candidate into a BSP program (sweeping store stages) and
+    price it with the SoftHier model, ranked by the calibration-aware cost.
+    Returns (best, log, tried) where best is (cost, schedule, report) — or
+    None when no candidate built legally."""
+    cost = ranking_cost(calibration)
+    best: Optional[Tuple[float, Schedule, PerfReport]] = None
+    log: List[Tuple[str, float, float]] = []
+    tried = 0
+    for base in candidates:
+        for stages in store_stage_options:
+            sched = dataclasses.replace(base, store_stages=stages)
+            try:
+                prog = build_program(sched, hw)
+            except (ValueError, KeyError):
+                continue
+            rep = estimate(prog, hw)
+            tried += 1
+            log.append((sched.describe(), cost(rep), rep.utilization(hw)))
+            if best is None or cost(rep) < best[0]:
+                best = (cost(rep), sched, rep)
+    return best, log, tried
 
 
 def tune(shape: GEMMShape, hw: AcceleratorConfig,
@@ -186,30 +238,17 @@ def tune(shape: GEMMShape, hw: AcceleratorConfig,
     comparable number); the ranking provenance is in
     `TunedResult.calibration`.
     """
-    trusted = _trusted(calibration)
-    cost = ranking_cost(calibration)
-    best: Optional[Tuple[float, Schedule, PerfReport]] = None
-    log: List[Tuple[str, float, float]] = []
-    tried = 0
-    for base in enumerate_candidates(shape, hw, dataflows, elem_bytes,
-                                     max_candidates=max_candidates,
-                                     calibration=calibration):
-        for stages in store_stage_options:
-            sched = dataclasses.replace(base, store_stages=stages)
-            try:
-                prog = build_program(sched, hw)
-            except (ValueError, KeyError):
-                continue
-            rep = estimate(prog, hw)
-            tried += 1
-            log.append((sched.describe(), cost(rep), rep.utilization(hw)))
-            if best is None or cost(rep) < best[0]:
-                best = (cost(rep), sched, rep)
+    best, log, tried = price_candidates(
+        enumerate_candidates(shape, hw, dataflows, elem_bytes,
+                             max_candidates=max_candidates,
+                             calibration=calibration),
+        hw, store_stage_options, calibration)
     if best is None:
         raise RuntimeError(f"no legal schedule found for {shape} on {hw.name}")
     return TunedResult(schedule=best[1], report=best[2],
                        candidates_tried=tried, log=log,
-                       calibration=calibration.digest() if trusted else "")
+                       calibration=calibration.digest()
+                       if _trusted(calibration) else "")
 
 
 def tune_cached(shape: GEMMShape, hw: AcceleratorConfig,

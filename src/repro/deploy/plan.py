@@ -25,10 +25,13 @@ from repro.sim.perf import PerfReport
 # Bump whenever the serialized layout below changes incompatibly.
 PLAN_SCHEMA_VERSION = 1
 
-# How the plan was produced: a full candidate search, or adapted from a
-# nearby tuned bucket (and therefore a candidate for background refinement).
+# How the plan was produced: a full candidate search, adapted from a nearby
+# tuned bucket, or priced online from the closed-form analytic shortlist
+# (core/analytic.py). Bucketed and analytic plans are candidates for
+# background refinement — only a full search settles the question.
 SOURCE_TUNED = "tuned"
 SOURCE_BUCKETED = "bucketed"
+SOURCE_ANALYTIC = "analytic"
 
 
 @functools.lru_cache(maxsize=64)

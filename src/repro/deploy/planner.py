@@ -8,11 +8,16 @@ I run this GEMM" question a serving stack asks:
   nearby tuned shape (one build + one estimate instead of a full search, and
   the exact shape is queued for background refinement); only a cold shape
   with no usable neighbour pays a full `tune`.
+- `plan_cached(shape)` — the serving path: hit, else bucketed transfer,
+  else an *online* tune over the closed-form analytic shortlist
+  (core/analytic.py — bounded candidate count, recorded as an `analytic`
+  plan and queued for background refinement). A cold shape never pays the
+  full candidate search at trace time.
 - `batch_tune(shapes)` — warm the cache for a whole workload in one pass,
   deduping shapes first.
 - `refine_pending()` / `refine_async(executor)` — the background-refinement
-  hook: re-tune bucket-served shapes for real and upgrade their cache
-  entries when the fresh schedule is faster.
+  hook: re-tune bucket- and analytic-served shapes for real and upgrade
+  their cache entries when the fresh schedule is no worse.
 
 `model_workload` extracts the deduplicated GEMM shapes of one model
 config's forward pass (projections, FFN, MoE experts, LM head) so a server
@@ -20,16 +25,20 @@ can warm its planner from the architectures it will host.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.analytic import DEFAULT_SHORTLIST_K, analytic_tune
 from repro.core.autotuner import tune
 from repro.core.schedule import GEMMShape, build_program
 from repro.hw.config import AcceleratorConfig
+from repro.obs.trace import maybe_span
 from repro.sim.perf import estimate
 
 from repro.deploy.bucketing import BucketingPolicy, transfer_candidates, adapt
 from repro.deploy.cache import PlanCache
-from repro.deploy.plan import (DeploymentPlan, SOURCE_BUCKETED, SOURCE_TUNED,
+from repro.deploy.plan import (DeploymentPlan, SOURCE_ANALYTIC,
+                               SOURCE_BUCKETED, SOURCE_TUNED,
                                hw_fingerprint, plan_admissible,
                                plan_from_tuning, search_variant)
 
@@ -43,7 +52,9 @@ class Planner:
                  store_stage_options: Tuple[int, ...] = (1, 4),
                  policy: BucketingPolicy = BucketingPolicy(),
                  on_plan: Optional[Callable[[DeploymentPlan], None]] = None,
-                 calibration=None):
+                 calibration=None,
+                 online_tune: bool = True,
+                 analytic_k: int = DEFAULT_SHORTLIST_K):
         self.hw = hw
         self.cache = cache if cache is not None else PlanCache()
         self.elem_bytes = (elem_bytes if elem_bytes is not None
@@ -79,6 +90,11 @@ class Planner:
         # restricted searches live under their own cache-key variant so they
         # never collide with (or clobber) the unrestricted winners.
         self.variant = search_variant(dataflows)
+        # online (analytic) tuning of plan_cached misses: price the
+        # closed-form shortlist instead of returning None. `analytic_k`
+        # bounds the per-miss work.
+        self.online_tune = online_tune
+        self.analytic_k = analytic_k
         self._pending: List[GEMMShape] = []
 
     # -- dispatch path ------------------------------------------------------
@@ -87,7 +103,11 @@ class Planner:
              allow_bucketed: bool = True) -> DeploymentPlan:
         cached = self.cache.get(shape, self.elem_bytes, self.hw,
                                 self.variant)
-        if cached is not None and self._admissible(cached):
+        if cached is not None and self._admissible(cached) \
+                and cached.source != SOURCE_ANALYTIC:
+            # an analytic entry (online shortlist winner) is served on the
+            # dispatch path but never satisfies `plan`: here paying the full
+            # search is the point, and the fresh tune replaces the entry.
             return cached
         if allow_bucketed:
             bucketed = self._bucketed_plan(shape)
@@ -98,16 +118,21 @@ class Planner:
     def plan_cached(self, shape: GEMMShape) -> Optional[DeploymentPlan]:
         """`plan` minus the full tune — the serving dispatch path.
 
-        Exact cache hit, else a bucketed transfer (which also queues the
-        shape for background refinement), else None. A cold shape never pays
-        a candidate search at trace time; the caller (`models.matmul.pmm`)
-        falls back to the auto dataflow and counts the miss.
+        Exact cache hit, else a bucketed transfer, else an online tune over
+        the closed-form analytic shortlist (both of which queue the shape
+        for background refinement), else None. A cold shape never pays the
+        full candidate search at trace time; when even the analytic path
+        finds no legal candidate the caller (`models.matmul.pmm`) falls
+        back to the auto dataflow and counts the miss.
         """
         cached = self.cache.get(shape, self.elem_bytes, self.hw,
                                 self.variant)
         if cached is not None and self._admissible(cached):
             return cached
-        return self._bucketed_plan(shape)
+        bucketed = self._bucketed_plan(shape)
+        if bucketed is not None:
+            return bucketed
+        return self._analytic_plan(shape)
 
     def _admissible(self, plan) -> bool:
         """Defensive check on top of the variant keying — the shared rule
@@ -136,11 +161,13 @@ class Planner:
             if src is None or not self._admissible(src):
                 continue
             if src.source != SOURCE_TUNED:
-                # never chain transfers off an already-bucketed plan: each
-                # hop can lose up to `tolerance`, and the expected-time
-                # guard scales the *source's* time, so generations would
-                # compound the loss unboundedly. Only full tunes seed
-                # transfers, bounding the error to one generation.
+                # never seed transfers from anything but a full tune.
+                # Bucketed sources would compound the per-hop tolerance
+                # loss unboundedly (each hop can lose up to `tolerance`
+                # and the expected-time guard scales the *source's* time);
+                # analytic sources are unrefined shortlist winners — the
+                # full search never validated them, so adapting one would
+                # chain a second unvalidated approximation onto the first.
                 continue
             adapted = adapt(src.schedule, shape, self.hw)
             if adapted is None:
@@ -173,6 +200,43 @@ class Planner:
                                 source=SOURCE_BUCKETED,
                                 variant=self.variant,
                                 calibration_digest=self._calibration_digest)
+        self.cache.put(plan)
+        self._pending.append(shape)
+        self._emit(plan)
+        return plan
+
+    def _analytic_plan(self, shape: GEMMShape) -> Optional[DeploymentPlan]:
+        """Online tune: price the closed-form shortlist for a cold shape.
+
+        Bounded work (`analytic_k` candidates instead of the full
+        enumeration), so the serving path can afford it on a miss. The
+        winner is cached as an `analytic` plan — served like any other,
+        but queued for background refinement, never a transfer source, and
+        replaced outright the first time `plan` sees the shape.
+        """
+        if not self.online_tune:
+            return None
+        with maybe_span("planner.online_tune", m=shape.m, n=shape.n,
+                        k=shape.k) as span_args:
+            try:
+                res = analytic_tune(shape, self.hw, dataflows=self.dataflows,
+                                    elem_bytes=self.elem_bytes,
+                                    k=self.analytic_k,
+                                    store_stage_options=self.store_stage_options,
+                                    calibration=self.calibration)
+            except RuntimeError:
+                # no legal shortlist candidate — the caller counts the miss
+                if span_args is not None:
+                    span_args["resolved"] = False
+                return None
+            if span_args is not None:
+                span_args.update(resolved=True,
+                                 candidates=res.candidates_tried,
+                                 schedule=res.schedule.describe())
+        plan = plan_from_tuning(shape, self.hw, res.schedule, res.report,
+                                candidates_tried=res.candidates_tried,
+                                source=SOURCE_ANALYTIC, variant=self.variant,
+                                calibration_digest=res.calibration)
         self.cache.put(plan)
         self._pending.append(shape)
         self._emit(plan)
@@ -250,6 +314,13 @@ class Planner:
         if self._cost(fresh.report) <= old_t:
             self.cache.put(fresh)
             self._emit(fresh)
+        elif current is not None and current.source == SOURCE_ANALYTIC:
+            # the shortlist winner beat the (bounded) full search — the
+            # search still validated it, so upgrade its provenance: it may
+            # now seed transfers and satisfies `plan` like any tuned entry.
+            upgraded = dataclasses.replace(current, source=SOURCE_TUNED)
+            self.cache.put(upgraded)
+            self._emit(upgraded)
         return (shape, old_t, self._cost(fresh.report))
 
     def _tune_shape(self, shape: GEMMShape) -> DeploymentPlan:

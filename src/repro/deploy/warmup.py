@@ -24,10 +24,15 @@ def add_plan_args(ap) -> None:
     ap.add_argument("--plan-candidates", type=int, default=12,
                     help="autotuner search width during warm-up")
     ap.add_argument("--skip-plan-warmup", action="store_true")
+    ap.add_argument("--no-online-tune", action="store_true",
+                    help="disable online (analytic-shortlist) tuning of "
+                         "plan_cached misses — cold shapes fall back to the "
+                         "auto dataflow instead")
 
 
 def build_planner(cache_dir: str, grid, max_candidates: int,
-                  dataflows=None, calibration=None) -> Planner:
+                  dataflows=None, calibration=None,
+                  online_tune: bool = True) -> Planner:
     """A Planner on the pod-view accelerator with a persistent cache.
 
     `dataflows` restricts the candidate search (the restricted plans live
@@ -39,6 +44,10 @@ def build_planner(cache_dir: str, grid, max_candidates: int,
     every launcher that warms from the cache dir tunes with the measured
     cost model; pass `calibration` explicitly to override (or
     `calibration=False` to force the analytical prior).
+
+    `online_tune=False` (the `--no-online-tune` flag) disables the analytic
+    shortlist on `plan_cached` misses, restoring the pre-online behaviour
+    where cold shapes degrade to the auto dataflow.
     """
     from repro.hw.config import tpu_pod_as_accelerator
     from repro.sim.calibrate import load_profile
@@ -50,7 +59,8 @@ def build_planner(cache_dir: str, grid, max_candidates: int,
     return Planner(hw, cache=PlanCache(cache_dir),
                    max_candidates=max_candidates,
                    dataflows=dataflows,
-                   calibration=calibration)
+                   calibration=calibration,
+                   online_tune=online_tune)
 
 
 def warm_buckets(planner: Planner,

@@ -35,14 +35,16 @@ from repro.train.steps import make_serve_step
 
 
 def warm_plan_cache(cfg, batch: int, prompt_len: int, max_len: int,
-                    cache_dir: str, grid, max_candidates: int) -> Planner:
+                    cache_dir: str, grid, max_candidates: int,
+                    online_tune: bool = True) -> Planner:
     """Batch-tune the model's (bucketed) GEMM workload into the plan cache.
 
     Warms BOTH the batched-prefill shapes (M = batch*prompt_len; a real
     deployment prefills in one pass, and the persisted cache is its
     artifact) and the decode shapes (M = batch) this launcher's
     token-by-token loop actually executes."""
-    planner = build_planner(cache_dir, grid, max_candidates)
+    planner = build_planner(cache_dir, grid, max_candidates,
+                            online_tune=online_tune)
     decode = model_workload(cfg, batch, max_len, kind="decode")
     workload = model_workload(cfg, batch, prompt_len, kind="prefill") + decode
     warm_buckets(planner, workload)
@@ -127,6 +129,14 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--no-plan-routing", action="store_true",
                     help="warm the cache but keep matmuls un-routed")
+    ap.add_argument("--cold-serve", action="store_true",
+                    help="skip the workload warm-up entirely: every traced "
+                         "GEMM resolves through the planner's online "
+                         "(analytic) tuning path — the real-time-planner "
+                         "proof, asserted in CI from the run report")
+    ap.add_argument("--refine-pending", type=int, default=0, metavar="N",
+                    help="after serving, full-tune up to N bucket/analytic-"
+                         "served shapes and upgrade their cache entries")
     ap.add_argument("--run-report", default="results/serve_run_report.json",
                     help="where to write the versioned run report "
                          "('' disables)")
@@ -142,11 +152,21 @@ def main():
 
     max_len = args.prompt_len + args.gen
     gemm_ctx = None
+    planner = None
     tracer = None
     if not args.skip_plan_warmup:
-        planner = warm_plan_cache(cfg, args.batch, args.prompt_len, max_len,
-                                  args.plan_cache, args.plan_grid,
-                                  args.plan_candidates)
+        if args.cold_serve:
+            # no warming: the planner starts empty (or with whatever the
+            # cache dir already holds) and cold shapes online-tune from the
+            # analytic shortlist at trace time
+            planner = build_planner(args.plan_cache, args.plan_grid,
+                                    args.plan_candidates,
+                                    online_tune=not args.no_online_tune)
+        else:
+            planner = warm_plan_cache(cfg, args.batch, args.prompt_len,
+                                      max_len, args.plan_cache,
+                                      args.plan_grid, args.plan_candidates,
+                                      online_tune=not args.no_online_tune)
         if not args.no_plan_routing:
             gemm_ctx = install_gemm_context(planner)
             tracer = Tracer(process_name=f"serve.{cfg.name}")
@@ -196,6 +216,13 @@ def main():
     print("sample generations (token ids):")
     for row in gen[:2]:
         print(" ", row[:16].tolist())
+    if planner is not None and args.refine_pending \
+            and planner.pending_refinements:
+        recs = planner.refine_pending(limit=args.refine_pending)
+        print(f"refinement: full-tuned {len(recs)} online/bucket-served "
+              f"shape(s); "
+              f"{sum(1 for _, old, new in recs if new < old)} improved "
+              f"(every refined entry is now tuned-provenance)")
     if gemm_ctx is not None:
         report = build_serve_report(gemm_ctx, cfg, args.batch, max_len,
                                     plan_cache=args.plan_cache,

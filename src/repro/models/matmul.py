@@ -11,7 +11,8 @@ each GEMM executes (the paper's core claim, applied to the model stack).
   cross-validating `repro.deploy.planner.model_workload`;
 - with a live mesh+planner context it flattens leading batch/seq dims to a
   2-D GEMM, consults the planner's warmed cache (exact hit, else bucketed
-  transfer — never a full tune on the dispatch path), and dispatches through
+  transfer, else an online tune over the closed-form analytic shortlist —
+  never a full tune on the dispatch path), and dispatches through
   `repro.core.gemm.dit_gemm`, which maps the tuned dataflow onto mesh
   collectives. Shapes with no usable plan still route through `dit_gemm`'s
   auto mode and are counted as fallbacks in the context stats.
@@ -59,21 +60,25 @@ def record_gemm(tag: str, m: int, n: int, k: int) -> None:
 
 
 def lookup_plan(planner, shape: GEMMShape):
-    """Dispatch-path plan lookup: (plan | None, 'hit' | 'bucketed' | None).
+    """Dispatch-path plan lookup:
+    (plan | None, 'hit' | 'bucketed' | 'analytic' | None).
 
     Never runs a full tune — serving traffic must not pay a candidate search
-    at trace time; cold shapes fall back to the auto dataflow and show up in
-    the stats (and in `Planner.pending_refinements` via the bucketed path).
-    Classification follows the served plan's provenance: 'hit' = born from a
-    full tune, 'bucketed' = adapted from a nearby tuned shape (whether the
-    transfer happened now or on an earlier lookup).
+    at trace time; cold shapes are online-tuned from the bounded analytic
+    shortlist, and only a shape with no legal shortlist candidate falls back
+    to the auto dataflow (counted in the stats). Classification follows the
+    served plan's provenance: 'hit' = born from a full tune, 'bucketed' =
+    adapted from a nearby tuned shape, 'analytic' = priced online from the
+    closed-form shortlist (whether the transfer/tune happened now or on an
+    earlier lookup).
     """
     plan = planner.plan_cached(shape)
     if plan is None:
         return None, None
-    # "bucketed" == deploy.plan.SOURCE_BUCKETED (string literal keeps the
-    # model layer's imports free of the deploy package)
-    kind = "bucketed" if getattr(plan, "source", "") == "bucketed" else "hit"
+    # literals == deploy.plan.SOURCE_BUCKETED / SOURCE_ANALYTIC (string
+    # literals keep the model layer's imports free of the deploy package)
+    source = getattr(plan, "source", "")
+    kind = source if source in ("bucketed", "analytic") else "hit"
     return plan, kind
 
 
@@ -101,6 +106,8 @@ def _dispatch_routed(ctx, x: jax.Array, w: jax.Array, shape: GEMMShape,
             ctx.stats.hits += 1
         elif kind == "bucketed":
             ctx.stats.bucketed += 1
+        elif kind == "analytic":
+            ctx.stats.analytic += 1
     if plan is None:
         ctx.stats.fallback += 1
         prov.update(provenance="fallback", mode="auto")

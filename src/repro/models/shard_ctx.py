@@ -19,8 +19,8 @@ Two layers, both set by launchers before tracing and no-ops when absent:
    dispatches through `repro.core.gemm.dit_gemm`. The context also records
    every (tag, GEMMShape) the model actually traces — the ground truth that
    `repro.deploy.planner.model_workload` is cross-validated against — and
-   keeps routing stats (exact hit / bucketed / fallback) for the launcher's
-   shutdown report. With no context installed, `pmm` is exactly `x @ w`, so
+   keeps routing stats (exact hit / bucketed / analytic online-tune /
+   fallback) for the launcher's shutdown report. With no context installed, `pmm` is exactly `x @ w`, so
    smoke tests and meshless tracing are unchanged.
 
 See docs/architecture.md for the full routing path.
@@ -61,6 +61,7 @@ class GemmStats:
     """
     hits: int = 0          # served a fully-tuned plan
     bucketed: int = 0      # served a bucket-transferred plan
+    analytic: int = 0      # served an online-tuned (analytic shortlist) plan
     fallback: int = 0      # no usable plan -> auto dataflow
     unrouted: int = 0      # recorded but not routed (no mesh in the context)
     observed: Dict[Tuple[str, object], int] = dataclasses.field(
@@ -88,12 +89,13 @@ class GemmStats:
 
     @property
     def routed(self) -> int:
-        return self.hits + self.bucketed + self.fallback
+        return self.hits + self.bucketed + self.analytic + self.fallback
 
     @property
     def resolved(self) -> int:
-        """Calls that found a cached or bucketed plan (the hit-rate numerator)."""
-        return self.hits + self.bucketed
+        """Calls that found a plan — cached, bucketed, or online-tuned
+        (the hit-rate numerator)."""
+        return self.hits + self.bucketed + self.analytic
 
     @property
     def resolve_rate(self) -> float:
@@ -115,6 +117,7 @@ class GemmStats:
             "routed": self.routed,
             "hits": self.hits,
             "bucketed": self.bucketed,
+            "analytic": self.analytic,
             "fallback": self.fallback,
             "unrouted": self.unrouted,
             "resolve_rate": self.resolve_rate,
@@ -135,6 +138,7 @@ class GemmStats:
         like `calls`/`routed`/`resolve_rate` are recomputed, not read)."""
         from repro.core.schedule import GEMMShape
         stats = cls(hits=int(d["hits"]), bucketed=int(d["bucketed"]),
+                    analytic=int(d.get("analytic", 0)),
                     fallback=int(d["fallback"]), unrouted=int(d["unrouted"]),
                     modes=dict(d.get("modes", {})),
                     degrades=dict(d.get("degrades", {})),

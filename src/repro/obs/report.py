@@ -42,6 +42,7 @@ def describe_routing(d: Dict[str, Any]) -> str:
     """
     out = (f"pmm calls={d['calls']} routed={d['routed']} "
            f"(hits={d['hits']} bucketed={d['bucketed']} "
+           f"analytic={d.get('analytic', 0)} "
            f"fallback={d['fallback']}) unrouted={d['unrouted']} "
            f"plan-resolve-rate={d['resolve_rate']:.0%}")
     if d.get("modes"):
@@ -54,7 +55,8 @@ def describe_routing(d: Dict[str, Any]) -> str:
 
 def dispatch_provenance(tracer) -> List[Dict[str, Any]]:
     """Per-dispatch provenance lifted from the tracer's pmm spans — the
-    run report's `dispatches` section (tag, shape, hit/bucketed/fallback,
+    run report's `dispatches` section (tag, shape,
+    hit/bucketed/analytic/fallback,
     plan + calibration digests, resolved mode, reasons, predicted cost)."""
     from repro.obs.trace import CAT_PMM
     return [dict(e.get("args", {}), name=e["name"])

@@ -76,6 +76,7 @@ def test_calibrate_flag_exists_and_is_documented():
     "## BENCH_routing.json",
     "## BENCH_calibration.json",
     "## BENCH_tracing.json",
+    "## BENCH_analytic.json",
 ])
 def test_bench_artifact_sections_present(section):
     """CI's assertions reference these artifacts by name; the schema doc
@@ -142,6 +143,35 @@ def test_plan_lifecycle_documents_calibration_stage():
                    ".profile.json"):
         assert needle in text, (
             f"docs/plan-lifecycle.md Calibration stage lost {needle!r}")
+
+
+def test_plan_lifecycle_documents_online_tuning_stage():
+    """The online-tuning surface stays pinned: the stage section, the
+    `analytic` variant/source string (CI asserts run-report provenance
+    against it), the shortlist entry points, and the launcher flags."""
+    text = _read(LIFECYCLE_MD)
+    assert "## Online (analytic) tuning" in text, (
+        "docs/plan-lifecycle.md lost the Online (analytic) tuning stage")
+    for needle in ('"analytic"', "analytic_shortlist", "analytic_tune",
+                   "BENCH_analytic.json", "--cold-serve",
+                   "--no-online-tune"):
+        assert needle in text, (
+            f"docs/plan-lifecycle.md Online (analytic) tuning stage lost "
+            f"{needle!r}")
+    # the variant string the docs pin must be the shipped constant
+    from repro.deploy.plan import SOURCE_ANALYTIC
+    assert SOURCE_ANALYTIC == "analytic"
+
+
+@pytest.mark.parametrize("field", [
+    # the BENCH_analytic.json keys CI asserts on
+    "top1_rate", "max_cost_ratio", "mean_gen_us", "max_gen_us",
+    "within_bounds", "mini_identity", "mini_calibrated", "pod_identity",
+])
+def test_analytic_schema_fields_documented(field):
+    assert field in _read(BENCHMARKING_MD), (
+        f"BENCH_analytic.json field {field!r} is asserted by CI but "
+        f"missing from docs/benchmarking.md")
 
 
 def _markdown_files():

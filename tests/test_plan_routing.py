@@ -352,3 +352,79 @@ def test_serve_context_plan_hits_multidevice():
     assert proc.returncode == 0, (f"stdout:\n{proc.stdout}\n"
                                   f"stderr:\n{proc.stderr}")
     assert "ALL_OK" in proc.stdout
+
+
+ONLINE_TUNE_BODY = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import smoke_config
+    from repro.deploy import Planner
+    from repro.deploy.bucketing import BucketingPolicy
+    from repro.deploy.plan import SOURCE_ANALYTIC, SOURCE_TUNED
+    from repro.hw.config import (AcceleratorConfig, HBMConfig, NoCConfig,
+                                 TileConfig)
+    from repro.models import shard_ctx
+    from repro.models.model import forward, init_params
+    from repro.models.shard_ctx import GemmContext
+
+    MINI = AcceleratorConfig(name="mini", grid=(4, 4),
+                             tile=TileConfig(l1_bytes=4 * 1024 * 1024),
+                             noc=NoCConfig(), hbm=HBMConfig(n_channels=8))
+    cfg = smoke_config("gemma-2b")
+    rng = np.random.default_rng(0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (4, 16)), jnp.int32)
+    base = np.asarray(forward(params, toks, cfg), np.float32)
+
+    # COLD planner: nothing warmed, transfers disabled — every traced shape
+    # is absent from the cache and must resolve through the online
+    # (analytic) tuning path, never the auto-dataflow fallback
+    planner = Planner(MINI, elem_bytes=4, max_candidates=8,
+                      policy=BucketingPolicy(max_transfers=0))
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    ctx = GemmContext(mesh=mesh, planner=planner)
+    shard_ctx.set_gemm_context(ctx)
+    routed = np.asarray(
+        jax.jit(lambda p, t: forward(p, t, cfg))(params, toks), np.float32)
+    shard_ctx.set_gemm_context(None)
+
+    s = ctx.stats
+    assert s.analytic > 0, "nothing resolved via the analytic variant"
+    assert s.hits == 0 and s.bucketed == 0, s.describe()
+    assert s.fallback == 0, f"silent degrade to auto: {s.describe()}"
+    assert s.silent_degrades == 0, s.describe()
+    assert s.resolve_rate == 1.0, s.describe()
+    # every online-served shape is cached with `analytic` provenance
+    pend = planner.pending_refinements
+    assert pend, "online tunes queued nothing for refinement"
+    for shape in s.observed_shapes():
+        p = planner.cache.peek(shape, 4, MINI, planner.variant)
+        assert p is not None and p.source == SOURCE_ANALYTIC, (shape, p)
+    # background refinement full-tunes each and upgrades the provenance
+    planner.refine_pending()
+    for shape in pend:
+        p = planner.cache.peek(shape, 4, MINI, planner.variant)
+        assert p.source == SOURCE_TUNED, (shape, p.source)
+    np.testing.assert_allclose(routed, base, rtol=5e-2, atol=5e-2)
+    print("stats:", s.describe())
+    print("ALL_OK")
+""")
+
+
+@pytest.mark.slow
+def test_cold_serve_online_tunes_multidevice():
+    """A routed multidevice trace with a COLD planner resolves every shape
+    via the `analytic` online-tuning variant (recorded provenance, zero
+    fallbacks/silent degrades) and background refinement upgrades each
+    entry to `tuned`."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", ONLINE_TUNE_BODY], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, (f"stdout:\n{proc.stdout}\n"
+                                  f"stderr:\n{proc.stderr}")
+    assert "ALL_OK" in proc.stdout

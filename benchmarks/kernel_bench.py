@@ -1,0 +1,337 @@
+"""Two-level tuning benchmark -> BENCH_kernel.json (the inner-kernel level
+of the schedule: planner-resolved local matmuls + ring/compute overlap).
+
+Four sections, three with asserted bounds so CI fails when engaging the
+intra-device level stops being free on this host:
+
+- **local_kernel**: `kernels.ops.local_matmul` under a planner-style
+  `InnerKernel` vs the bare `jnp.dot` fp32 oracle, per GEMM, single
+  device. On CPU the kernel path IS the oracle (docstring contract), so
+  the ratio measures pure dispatch overhead. Bound: geomean <= 1.10.
+- **routed_modes**: every executable mode (the shared
+  `sim.calibrate.MODE_CASES` table) on the 4x4 host mesh, schedule with
+  its closed-form inner-kernel candidate vs `inner_kernel=None`. Lowering
+  is asserted clean AND the ExecPlan is asserted to actually carry the
+  kernel — a silent drop would benchmark the baseline against itself.
+  Bound: per-mode kernel-on/kernel-off geomean <= 1.10.
+- **overlap**: the ring modes (cannon, hierarchical, outer_systolic) with
+  `Schedule.overlap` on vs off — permute-before-consume must be free (the
+  collectives leave the critical path; XLA may or may not exploit it on
+  fake devices) and numerically identical (asserted allclose). Bound:
+  geomean <= 1.10.
+- **agreement**: jax-free — exhaustive `tune` vs `analytic_tune` over a
+  shape grid on the mini accelerator, comparing the *inner* pick. Bounds:
+  inner-pick match rate >= 0.5, shortlist-best cost within 1.05x of the
+  exhaustive optimum, and the joint space must actually engage (the
+  exhaustive winner carries a kernel for at least one shape).
+
+Like the routing/tracing benches, the host-mesh ratios measure dispatch
+and collective-schedule overhead, not real fabric: on a TPU mesh rerun
+the same command to see the Pallas block geometry and async-ring effects
+the cost model prices.
+
+Standalone (sets its own fake-device count; run before importing jax
+elsewhere):
+
+  PYTHONPATH=src python benchmarks/kernel_bench.py --reps 2
+
+Also exposed to benchmarks/run.py via a subprocess `run()` so the device
+count does not leak into the other benchmarks' jax runtime.
+"""
+import argparse
+import json
+import math
+import os
+import time
+from typing import List
+
+KERNEL_OVER_DOT_BOUND = 1.10      # local_matmul / jnp.dot geomean
+ROUTED_KERNEL_BOUND = 1.10        # routed kernel-on / kernel-off geomean
+OVERLAP_BOUND = 1.10              # routed overlap-on / overlap-off geomean
+INNER_MATCH_FLOOR = 0.5           # tune vs analytic inner-pick agreement
+COST_RATIO_BOUND = 1.05           # analytic-best / exhaustive-best cost
+
+LOCAL_GEMMS = ((256, 256, 512), (512, 512, 512), (384, 512, 1024))
+ROUTED_GEMMS = ((256, 256, 512), (512, 512, 512))
+RING_MODES = ("cannon", "hierarchical", "outer_systolic")
+
+# agreement grid: shapes divisible by the mini 4x4 grid's tilings
+AGREEMENT_SHAPES = ((1024, 1024, 2048), (2048, 1024, 1024),
+                    (1024, 2048, 4096), (512, 512, 1024))
+
+
+def _geomean(xs) -> float:
+    xs = list(xs)
+    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else 1.0
+
+
+def _mini_hw(grid=(4, 4)):
+    from repro.hw.config import AcceleratorConfig, HBMConfig, TileConfig
+    return AcceleratorConfig(name="mini", grid=grid,
+                             tile=TileConfig(l1_bytes=4 * 1024 * 1024),
+                             hbm=HBMConfig(n_channels=8))
+
+
+def _bench_local(reps: int) -> dict:
+    """local_matmul under an InnerKernel vs the bare jnp.dot oracle."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.schedule import InnerKernel
+    from repro.kernels.ops import local_matmul, pick_block_shape
+    from repro.sim.calibrate import time_best_of
+
+    rng = np.random.default_rng(0)
+    rows = []
+    for (m, n, k) in LOCAL_GEMMS:
+        a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        ik = InnerKernel(*pick_block_shape(m, n, k, 4), dtype="float32")
+        dot = jax.jit(lambda x, y: jnp.dot(
+            x, y, preferred_element_type=jnp.float32))
+        ker = jax.jit(lambda x, y, kk=ik: local_matmul(x, y, kk))
+        t_dot = time_best_of(dot, a, b, reps)
+        t_ker = time_best_of(ker, a, b, reps)
+        rows.append({"gemm": [m, n, k], "kernel": ik.describe(),
+                     "dot_us": round(t_dot * 1e6, 1),
+                     "kernel_us": round(t_ker * 1e6, 1),
+                     "ratio": round(t_ker / t_dot, 3)})
+    return {"gemms": rows,
+            "geomean_ratio": round(_geomean(r["ratio"] for r in rows), 3)}
+
+
+def _routed_fn(sched, mesh, expect_kernel: bool):
+    """jit'd dit_gemm through the schedule's ExecPlan, lowering asserted
+    clean (and the kernel asserted present/absent as labelled)."""
+    import jax
+
+    from repro.core.gemm import dit_gemm
+    from repro.core.lower import lower_schedule
+
+    ep = lower_schedule(sched, mesh, "data", "model",
+                        shape=(sched.shape.m, sched.shape.n, sched.shape.k))
+    if ep.degraded:
+        raise RuntimeError(f"{sched.dataflow} degraded: {ep.describe()}")
+    if (ep.inner_kernel is not None) != expect_kernel:
+        raise RuntimeError(f"{sched.dataflow}: inner kernel "
+                           f"{'dropped' if expect_kernel else 'appeared'} "
+                           f"in lowering ({ep.describe()})")
+    return jax.jit(lambda x, y: dit_gemm(x, y, mesh, exec_plan=ep)), ep
+
+
+def _bench_routed(reps: int) -> dict:
+    """Every mode, kernel-on vs kernel-off, on the 4x4 host mesh."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.schedule import inner_kernel_candidates
+    from repro.sim.calibrate import (MODE_CASES, build_mode_schedule,
+                                     time_best_of)
+
+    hw = _mini_hw()
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    rng = np.random.default_rng(0)
+    modes = {}
+    for label, df, kw in MODE_CASES:
+        cases = []
+        for (M, N, K) in ROUTED_GEMMS:
+            a = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+            b = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+            off = build_mode_schedule(df, kw, 4, 4, (M, N, K),
+                                      elem_bytes=hw.tile.elem_bytes)
+            iks = inner_kernel_candidates(off, hw)
+            if not iks:
+                raise RuntimeError(f"no inner-kernel candidate for {df} "
+                                   f"{(M, N, K)} — the joint space is empty")
+            on = dataclasses.replace(off, inner_kernel=iks[0])
+            fn_off, _ = _routed_fn(off, mesh, expect_kernel=False)
+            fn_on, ep_on = _routed_fn(on, mesh, expect_kernel=True)
+            t_off = time_best_of(fn_off, a, b, reps)
+            t_on = time_best_of(fn_on, a, b, reps)
+            cases.append({"gemm": [M, N, K],
+                          "kernel": ep_on.inner_kernel.describe(),
+                          "off_us": round(t_off * 1e6, 1),
+                          "on_us": round(t_on * 1e6, 1),
+                          "ratio": round(t_on / t_off, 3)})
+        modes[label] = {"gemms": cases,
+                        "geomean_ratio": round(
+                            _geomean(c["ratio"] for c in cases), 3)}
+    return {"modes": modes,
+            "geomean_ratio": round(
+                _geomean(m["geomean_ratio"] for m in modes.values()), 3)}
+
+
+def _bench_overlap(reps: int) -> dict:
+    """Ring modes with Schedule.overlap on vs off (numerics asserted)."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.sim.calibrate import (MODE_CASES, build_mode_schedule,
+                                     time_best_of)
+
+    hw = _mini_hw()
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    rng = np.random.default_rng(0)
+    modes = {}
+    for label, df, kw in MODE_CASES:
+        if label not in RING_MODES:
+            continue
+        cases = []
+        for (M, N, K) in ROUTED_GEMMS:
+            a = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+            b = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+            off = build_mode_schedule(df, kw, 4, 4, (M, N, K),
+                                      elem_bytes=hw.tile.elem_bytes)
+            on = dataclasses.replace(off, overlap=True)
+            fn_off, _ = _routed_fn(off, mesh, expect_kernel=False)
+            fn_on, ep_on = _routed_fn(on, mesh, expect_kernel=False)
+            if not ep_on.overlap:
+                raise RuntimeError(f"{df}: overlap dropped in lowering")
+            diff = float(jnp.max(jnp.abs(fn_on(a, b) - fn_off(a, b))))
+            if diff > 1e-3:
+                raise RuntimeError(f"{df}: overlap moved numerics "
+                                   f"(max abs diff {diff})")
+            t_off = time_best_of(fn_off, a, b, reps)
+            t_on = time_best_of(fn_on, a, b, reps)
+            cases.append({"gemm": [M, N, K], "max_abs_diff": diff,
+                          "off_us": round(t_off * 1e6, 1),
+                          "on_us": round(t_on * 1e6, 1),
+                          "ratio": round(t_on / t_off, 3)})
+        modes[label] = {"gemms": cases,
+                        "geomean_ratio": round(
+                            _geomean(c["ratio"] for c in cases), 3)}
+    return {"modes": modes,
+            "geomean_ratio": round(
+                _geomean(m["geomean_ratio"] for m in modes.values()), 3)}
+
+
+def _bench_agreement() -> dict:
+    """Exhaustive tune vs analytic_tune: do they pick the same inner
+    kernel, and does the shortlist's winner cost stay near the optimum?
+    Pure cost-model arithmetic — no jax, no devices."""
+    from repro.core.analytic import analytic_tune
+    from repro.core.autotuner import tune
+    from repro.core.schedule import GEMMShape
+
+    hw = _mini_hw()
+    rows, matches, kernel_picks = [], 0, 0
+    t0 = time.perf_counter()
+    for (M, N, K) in AGREEMENT_SHAPES:
+        shape = GEMMShape(M, N, K)
+        full = tune(shape, hw, max_candidates=32)
+        short = analytic_tune(shape, hw)
+        ik_full = (full.schedule.inner_kernel.describe()
+                   if full.schedule.inner_kernel else None)
+        ik_short = (short.schedule.inner_kernel.describe()
+                    if short.schedule.inner_kernel else None)
+        match = ik_full == ik_short
+        matches += match
+        kernel_picks += ik_full is not None
+        rows.append({"shape": [M, N, K],
+                     "tune_inner": ik_full, "analytic_inner": ik_short,
+                     "tune_dataflow": full.schedule.dataflow,
+                     "analytic_dataflow": short.schedule.dataflow,
+                     "cost_ratio": round(short.report.total_time
+                                         / full.report.total_time, 4),
+                     "inner_match": match})
+    return {"shapes": rows,
+            "inner_match_rate": round(matches / len(rows), 3),
+            "kernel_pick_rate": round(kernel_picks / len(rows), 3),
+            "max_cost_ratio": round(max(r["cost_ratio"] for r in rows), 4),
+            "wall_s": round(time.perf_counter() - t0, 2)}
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reps", type=int, default=2,
+                    help="timing repetitions (best-of)")
+    ap.add_argument("--out", default="BENCH_kernel.json")
+    args = ap.parse_args(argv)
+
+    # must precede the first jax import (the lazy in-function imports
+    # above); appended rather than set so a pre-existing XLA_FLAGS keeps
+    # its settings alongside the fake-device count.
+    if "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=16").strip()
+
+    result = {
+        "local_kernel": _bench_local(args.reps),
+        "routed_modes": _bench_routed(args.reps),
+        "overlap": _bench_overlap(args.reps),
+        "agreement": _bench_agreement(),
+    }
+    result["bounds"] = {
+        "local_geomean_ratio": KERNEL_OVER_DOT_BOUND,
+        "routed_geomean_ratio": ROUTED_KERNEL_BOUND,
+        "overlap_geomean_ratio": OVERLAP_BOUND,
+        "inner_match_rate": INNER_MATCH_FLOOR,
+        "max_cost_ratio": COST_RATIO_BOUND,
+    }
+    result["within_bounds"] = (
+        result["local_kernel"]["geomean_ratio"] <= KERNEL_OVER_DOT_BOUND
+        and result["routed_modes"]["geomean_ratio"] <= ROUTED_KERNEL_BOUND
+        and result["overlap"]["geomean_ratio"] <= OVERLAP_BOUND
+        and result["agreement"]["inner_match_rate"] >= INNER_MATCH_FLOOR
+        and result["agreement"]["max_cost_ratio"] <= COST_RATIO_BOUND
+        and result["agreement"]["kernel_pick_rate"] > 0)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+
+    print(f"kernel.local,{result['local_kernel']['geomean_ratio']},"
+          f"vs_jnp_dot_geomean")
+    print(f"kernel.routed,{result['routed_modes']['geomean_ratio']},"
+          f"on_over_off_geomean")
+    print(f"kernel.overlap,{result['overlap']['geomean_ratio']},"
+          f"on_over_off_geomean")
+    print(f"kernel.agreement,{result['agreement']['inner_match_rate']},"
+          f"cost_ratio_max={result['agreement']['max_cost_ratio']} "
+          f"kernel_pick_rate={result['agreement']['kernel_pick_rate']}")
+    print(f"wrote {args.out}")
+    if not result["within_bounds"]:
+        raise SystemExit(
+            f"kernel level out of bounds: "
+            f"local={result['local_kernel']['geomean_ratio']} "
+            f"(<= {KERNEL_OVER_DOT_BOUND}), "
+            f"routed={result['routed_modes']['geomean_ratio']} "
+            f"(<= {ROUTED_KERNEL_BOUND}), "
+            f"overlap={result['overlap']['geomean_ratio']} "
+            f"(<= {OVERLAP_BOUND}), "
+            f"inner_match={result['agreement']['inner_match_rate']} "
+            f"(>= {INNER_MATCH_FLOOR}), "
+            f"cost_ratio={result['agreement']['max_cost_ratio']} "
+            f"(<= {COST_RATIO_BOUND}), "
+            f"kernel_pick_rate={result['agreement']['kernel_pick_rate']} "
+            f"(> 0)")
+    return result
+
+
+def run() -> List[str]:
+    """benchmarks/run.py hook: subprocess so the fake-device XLA flag never
+    leaks into the shared jax runtime of the other benchmarks."""
+    import subprocess
+    import sys
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--reps", "1",
+         "--out", os.devnull],
+        capture_output=True, text=True, timeout=900,
+        env={**os.environ, "PYTHONPATH":
+             os.pathsep.join(filter(None, [
+                 os.path.join(os.path.dirname(__file__), "..", "src"),
+                 os.environ.get("PYTHONPATH", "")]))})
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-500:])
+    return [l for l in proc.stdout.splitlines() if l.startswith("kernel.")]
+
+
+if __name__ == "__main__":
+    main()

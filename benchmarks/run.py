@@ -9,8 +9,11 @@ trace+lower cost, per-mode execution efficiency vs XLA auto) and
 `calibration_bench` writes BENCH_calibration.json (cost-model fit quality,
 rank agreement, calibrated-vs-analytical pick quality), `tracing_bench`
 writes BENCH_tracing.json (observability-layer overhead on the dispatch
-path, with asserted bounds) and `analytic_bench` writes BENCH_analytic.json
+path, with asserted bounds), `analytic_bench` writes BENCH_analytic.json
 (closed-form shortlist rank agreement vs exhaustive search, with asserted
+bounds) and `kernel_bench` writes BENCH_kernel.json (the inner-kernel
+schedule level: local_matmul vs jnp.dot, routed kernel-on/off, ring
+overlap on/off, tune-vs-analytic inner-pick agreement, with asserted
 bounds) — every BENCH_* artifact's schema, production command, and
 regression meaning is documented in docs/benchmarking.md."""
 from __future__ import annotations
@@ -23,8 +26,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (analytic_bench, calibration_bench,
                             fig7_case_study, fig9_11_gh200,
-                            fig12_portability, microbench, plan_bench,
-                            routing_bench, tracing_bench)
+                            fig12_portability, kernel_bench, microbench,
+                            plan_bench, routing_bench, tracing_bench)
     modules = [
         ("fig7", fig7_case_study),
         ("fig9-11", fig9_11_gh200),
@@ -35,6 +38,7 @@ def main() -> None:
         ("calibration", calibration_bench),
         ("tracing", tracing_bench),
         ("analytic", analytic_bench),
+        ("kernel", kernel_bench),
     ]
     try:
         from benchmarks import roofline_table

@@ -49,7 +49,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.autotuner import (DATAFLOW_WEIGHT, TunedResult,
                                   default_dataflows, enumerate_candidates,
                                   insight_base, price_candidates, tune)
-from repro.core.schedule import GEMMShape, Schedule, Tiling
+from repro.core.schedule import (GEMMShape, Schedule, Tiling,
+                                 default_elem_dtype)
 from repro.hw.config import AcceleratorConfig
 from repro.sim.calibrate import is_trusted as _trusted
 from repro.sim.calibrate import ranking_cost
@@ -300,10 +301,11 @@ def analytic_shortlist(shape: GEMMShape, hw: AcceleratorConfig,
                 picked.append(fam[depth][1])
         depth += 1
 
+    elem_dtype = default_elem_dtype(elem_bytes, hw)
     short = [Schedule(shape=shape,
                       tiling=Tiling(gm, gn, gk, im, it, tk_eff),
                       dataflow=df, inner=(2, 2), elem_bytes=elem_bytes,
-                      acc_bytes=acc)
+                      acc_bytes=acc, elem_dtype=elem_dtype)
              for gm, gn, gk, im, it, tk_eff, df, acc in picked]
     if not short:
         # geometry found nothing (degenerate divisibility) — fall back to

@@ -16,11 +16,12 @@ import dataclasses
 import math
 from typing import Iterator, List, Optional, Tuple
 
-from repro.core.schedule import GEMMShape, Schedule, Tiling, build_program
+from repro.core.schedule import (GEMMShape, Schedule, Tiling, build_program,
+                                 default_elem_dtype, inner_kernel_candidates)
 from repro.hw.config import AcceleratorConfig
 from repro.sim.calibrate import is_trusted as _trusted
 from repro.sim.calibrate import ranking_cost
-from repro.sim.perf import PerfReport, estimate
+from repro.sim.perf import PerfReport, estimate, estimate_sweep
 
 # The paper's search space (§4.1.4). The hierarchical compositions join it
 # ONLY under a trusted (fit_ok) measured calibration — their simulated win
@@ -188,7 +189,8 @@ def enumerate_candidates(shape: GEMMShape, hw: AcceleratorConfig,
                                 tiling=Tiling(gm, gn, gk, iter_m, iter_n, tk_eff),
                                 dataflow=df, inner=(2, 2),
                                 elem_bytes=elem_bytes,
-                                acc_bytes=acc_bytes)))
+                                acc_bytes=acc_bytes,
+                                elem_dtype=default_elem_dtype(elem_bytes, hw))))
     cands.sort(key=lambda sc: sc[0])
     for _, sched in cands[:max_candidates]:
         yield sched
@@ -196,14 +198,33 @@ def enumerate_candidates(shape: GEMMShape, hw: AcceleratorConfig,
 
 def price_candidates(candidates: Iterator[Schedule], hw: AcceleratorConfig,
                      store_stage_options: Tuple[int, ...] = (1, 4),
-                     calibration=None
+                     calibration=None,
+                     inner_kernels="auto"
                      ) -> Tuple[Optional[Tuple[float, Schedule, PerfReport]],
                                 List[Tuple[str, float, float]], int]:
     """The shared pricing loop behind `tune` and `analytic.analytic_tune`:
     build each candidate into a BSP program (sweeping store stages) and
     price it with the SoftHier model, ranked by the calibration-aware cost.
     Returns (best, log, tried) where best is (cost, schedule, report) — or
-    None when no candidate built legally."""
+    None when no candidate built legally.
+
+    `inner_kernels` makes the intra-device level part of the same search:
+
+    - `"auto"` (default): each outer candidate is joint-priced against its
+      closed-form `inner_kernel_candidates` shortlist PLUS the bare
+      `None` (XLA-picks) path. A schedule arriving with an explicit
+      `inner_kernel` is priced only under it (the caller already chose).
+    - `None`: legacy single-level pricing — every candidate keeps
+      `inner_kernel=None`.
+    - a tuple of `InnerKernel`s (or `None`s): the explicit sweep set.
+
+    Inner candidates are swept BEFORE `None` and the best is kept by strict
+    `<`, so when a planner-visible kernel prices exactly like the opaque
+    path (the aligned-geometry tie the cost model constructs on purpose)
+    the plan carries real, reportable geometry. Communication pricing runs
+    once per program (`estimate_sweep`), so the joint search costs one comm
+    pass plus a cheap compute recombination per inner candidate.
+    """
     cost = ranking_cost(calibration)
     best: Optional[Tuple[float, Schedule, PerfReport]] = None
     log: List[Tuple[str, float, float]] = []
@@ -215,11 +236,21 @@ def price_candidates(candidates: Iterator[Schedule], hw: AcceleratorConfig,
                 prog = build_program(sched, hw)
             except (ValueError, KeyError):
                 continue
-            rep = estimate(prog, hw)
-            tried += 1
-            log.append((sched.describe(), cost(rep), rep.utilization(hw)))
-            if best is None or cost(rep) < best[0]:
-                best = (cost(rep), sched, rep)
+            if sched.inner_kernel is not None:
+                inners = (sched.inner_kernel,)
+            elif inner_kernels == "auto":
+                inners = inner_kernel_candidates(sched, hw) + (None,)
+            elif inner_kernels is None:
+                inners = (None,)
+            else:
+                inners = tuple(inner_kernels)
+            for ik, rep in estimate_sweep(prog, hw, inners):
+                cand = (sched if ik is sched.inner_kernel
+                        else dataclasses.replace(sched, inner_kernel=ik))
+                tried += 1
+                log.append((cand.describe(), cost(rep), rep.utilization(hw)))
+                if best is None or cost(rep) < best[0]:
+                    best = (cost(rep), cand, rep)
     return best, log, tried
 
 

@@ -14,10 +14,11 @@ from typing import Dict, Tuple
 from repro.core.ir import BufferDecl, Program
 from repro.core.masks import TileGroup, axis_bits
 from repro.core.remap import flat_mask_group
-from repro.core.schedule import GEMMShape, Schedule, resolve_layouts
+from repro.core.schedule import (DTYPE_OF_BYTES, GEMMShape, Schedule,
+                                 elem_dtype_name, resolve_layouts)
 from repro.hw.config import AcceleratorConfig
 
-DTYPE_OF_BYTES = {1: "int8", 2: "float16", 4: "float32"}
+__all__ = ["DTYPE_OF_BYTES", "GridView"]  # DTYPE_OF_BYTES re-exported for importers
 
 
 @dataclasses.dataclass
@@ -69,7 +70,9 @@ class GridView:
     # -- buffer plan -----------------------------------------------------------
 
     def dtype(self) -> str:
-        return DTYPE_OF_BYTES[self.sched.elem_bytes]
+        # schedule's explicit dtype > hardware's native engine dtype (when the
+        # byte widths agree — the gh200 preset's fp8) > legacy byte default.
+        return elem_dtype_name(self.sched, self.hw)
 
     def make_program(self, buffers: Dict[str, BufferDecl], name: str) -> Program:
         return Program(

@@ -55,11 +55,29 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.lower import ExecPlan, lower_schedule
+from repro.core.schedule import InnerKernel
 
 # modes dispatchable by name; the plan-only modes (splitk_summa,
 # hierarchical, outer_systolic) additionally need a mesh view — see
 # lower.EXEC_MODES.
 MODES = ("auto", "summa", "cannon", "splitk", "allgather")
+
+
+def _tile_dot(a: jax.Array, b: jax.Array,
+              kernel: Optional[InnerKernel]) -> jax.Array:
+    """The per-device contraction every mode body accumulates with.
+
+    `kernel=None` is the legacy path — a bare `jnp.dot` whose inner schedule
+    XLA picks. With a plan-resolved `InnerKernel` the contraction routes
+    through `kernels.ops.local_matmul` at the planner's block geometry /
+    compute dtype (Pallas on TPU, the bitwise-identical jnp oracle on CPU),
+    making the intra-device level a tuned schedule dimension rather than a
+    compiler default. fp32 out either way.
+    """
+    if kernel is None:
+        return jnp.dot(a, b, preferred_element_type=jnp.float32)
+    from repro.kernels.ops import local_matmul
+    return local_matmul(a, b, kernel)
 
 
 def _axis_size(mesh: Mesh, name: str) -> int:
@@ -82,7 +100,8 @@ def _mode_scope(mode: str):
 # ---------------------------------------------------------------------------
 
 def _summa_acc(a_loc: jax.Array, b_loc: jax.Array, row_axis: str,
-               col_axis: str, dm: int, dn: int) -> jax.Array:
+               col_axis: str, dm: int, dn: int,
+               kernel: Optional[InnerKernel] = None) -> jax.Array:
     """fp32 SUMMA accumulation of the local C block over dm*dn K-panels.
 
     Runs inside shard_map over (row_axis, col_axis) — which may be sub-axes
@@ -103,7 +122,7 @@ def _summa_acc(a_loc: jax.Array, b_loc: jax.Array, row_axis: str,
         b_pan = jax.lax.dynamic_slice_in_dim(b_loc, (p % dn) * w, w, axis=0)
         b_pan = jnp.where(i == p // dn, b_pan, jnp.zeros_like(b_pan))
         b_pan = jax.lax.psum(b_pan, row_axis)          # owner broadcast
-        acc = acc + jnp.dot(a_pan, b_pan, preferred_element_type=jnp.float32)
+        acc = acc + _tile_dot(a_pan, b_pan, kernel)
         return acc, None
 
     acc = jnp.zeros((a_loc.shape[0], b_loc.shape[1]), dtype=jnp.float32)
@@ -112,7 +131,8 @@ def _summa_acc(a_loc: jax.Array, b_loc: jax.Array, row_axis: str,
 
 
 def summa_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
-               row_axis: str = "data", col_axis: str = "model") -> jax.Array:
+               row_axis: str = "data", col_axis: str = "model",
+               kernel: Optional[InnerKernel] = None) -> jax.Array:
     """C[i,j] = sum_p A_panel[i,p] @ B_panel[p,j] with owner broadcasts.
 
     A is sharded (row_axis, col_axis), B (row_axis, col_axis), C likewise.
@@ -127,7 +147,7 @@ def summa_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
 
     def body(a_loc, b_loc):
         return _summa_acc(a_loc, b_loc, row_axis, col_axis,
-                          dm, dn).astype(a_loc.dtype)
+                          dm, dn, kernel).astype(a_loc.dtype)
 
     spec2 = P(row_axis, col_axis)
     return shard_map(body, mesh=mesh, in_specs=(spec2, spec2),
@@ -139,12 +159,21 @@ def summa_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
 # ---------------------------------------------------------------------------
 
 def _cannon_acc(a_blk: jax.Array, b_blk: jax.Array, row_axis: str,
-                col_axis: str, d: int) -> jax.Array:
+                col_axis: str, d: int,
+                kernel: Optional[InnerKernel] = None,
+                overlap: bool = False) -> jax.Array:
     """fp32 Cannon accumulation on a square d x d (sub-)grid: initial skew,
     then d rotate-and-accumulate steps over `ppermute` rings.
 
     Like `_summa_acc`, the axes may be inner sub-axes of a mesh view — the
     wavefront then stays within each inner group (hierarchical mode).
+
+    `overlap=True` issues step s+1's ring hops BEFORE consuming step s's
+    blocks inside each scan step — numerically identical (the dot still
+    reads the pre-rotation blocks), but the collectives are no longer
+    data-dependent successors of the contraction, so XLA's async collective
+    machinery can hide each `ppermute` behind the tile compute (the paper's
+    §3.3.1 DMA/compute double-buffering, at the mesh level).
     """
     left = [(s, (s - 1) % d) for s in range(d)]          # shift along cols
     up = [(s, (s - 1) % d) for s in range(d)]            # shift along rows
@@ -168,7 +197,13 @@ def _cannon_acc(a_blk: jax.Array, b_blk: jax.Array, row_axis: str,
 
     def step(carry, _):
         a_cur, b_cur, acc = carry
-        acc = acc + jnp.dot(a_cur, b_cur, preferred_element_type=jnp.float32)
+        if overlap:
+            # issue next step's hops first; consume the held blocks after
+            a_nxt = jax.lax.ppermute(a_cur, col_axis, left)
+            b_nxt = jax.lax.ppermute(b_cur, row_axis, up)
+            acc = acc + _tile_dot(a_cur, b_cur, kernel)
+            return (a_nxt, b_nxt, acc), None
+        acc = acc + _tile_dot(a_cur, b_cur, kernel)
         a_cur = jax.lax.ppermute(a_cur, col_axis, left)
         b_cur = jax.lax.ppermute(b_cur, row_axis, up)
         return (a_cur, b_cur, acc), None
@@ -181,7 +216,9 @@ def _cannon_acc(a_blk: jax.Array, b_blk: jax.Array, row_axis: str,
 
 
 def cannon_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
-                row_axis: str = "data", col_axis: str = "model") -> jax.Array:
+                row_axis: str = "data", col_axis: str = "model",
+                kernel: Optional[InnerKernel] = None,
+                overlap: bool = False) -> jax.Array:
     """Systolic GEMM on a square mesh: skew, then rotate-and-accumulate.
 
     Every transfer is a single nearest-neighbour hop (`ppermute` ring) — the
@@ -193,7 +230,7 @@ def cannon_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
 
     def body(a_loc, b_loc):
         return _cannon_acc(a_loc, b_loc, row_axis, col_axis,
-                           dm).astype(a_loc.dtype)
+                           dm, kernel, overlap).astype(a_loc.dtype)
 
     spec2 = P(row_axis, col_axis)
     return shard_map(body, mesh=mesh, in_specs=(spec2, spec2),
@@ -205,7 +242,8 @@ def cannon_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
 # ---------------------------------------------------------------------------
 
 def splitk_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
-                k_axis: str = "model", scatter: bool = True) -> jax.Array:
+                k_axis: str = "model", scatter: bool = True,
+                kernel: Optional[InnerKernel] = None) -> jax.Array:
     """K sharded over `k_axis`; local partial GEMM + NoC reduction.
 
     scatter=True  -> psum_scatter: C row-blocks round-robined over the k-group
@@ -218,7 +256,7 @@ def splitk_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
         raise ValueError(f"M={m} must divide by k-axis size {dk} for scatter")
 
     def body(a_loc, b_loc):
-        part = jnp.dot(a_loc, b_loc, preferred_element_type=jnp.float32)
+        part = _tile_dot(a_loc, b_loc, kernel)
         if scatter:
             out = jax.lax.psum_scatter(part, k_axis, scatter_dimension=0,
                                        tiled=True)
@@ -235,7 +273,8 @@ def splitk_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
 def splitk_summa_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
                       row_axis: str = "data", col_axis: str = "model",
                       k_axis: str = "splitk",
-                      scatter: bool = True) -> jax.Array:
+                      scatter: bool = True,
+                      kernel: Optional[InnerKernel] = None) -> jax.Array:
     """3-D split-K on a (row × col × k) mesh view: each of the gk k-groups
     runs SUMMA over its (row × col) sub-grid on a K/gk slice, then partials
     reduce over the k sub-axis.
@@ -255,7 +294,7 @@ def splitk_summa_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
         raise ValueError(f"M={m} must divide by rm*gk={rm * gk} for scatter")
 
     def body(a_loc, b_loc):
-        acc = _summa_acc(a_loc, b_loc, row_axis, col_axis, rm, rn)
+        acc = _summa_acc(a_loc, b_loc, row_axis, col_axis, rm, rn, kernel)
         if scatter:
             out = jax.lax.psum_scatter(acc, k_axis, scatter_dimension=0,
                                        tiled=True)
@@ -277,7 +316,9 @@ def splitk_summa_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
 def hierarchical_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
                       row_axis: str = "data", col_axis: str = "model",
                       inner_row: str = "data_in",
-                      inner_col: str = "model_in") -> jax.Array:
+                      inner_col: str = "model_in",
+                      kernel: Optional[InnerKernel] = None,
+                      overlap: bool = False) -> jax.Array:
     """Hierarchical dataflow on an (outer_row × inner_row × outer_col ×
     inner_col) mesh view — the mesh analogue of the paper's Fig. 6d
     (SUMMA over systolic): the outer (Om × On) grid of inner (ih × ih)
@@ -325,7 +366,8 @@ def hierarchical_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
                 b_g, (p % on) * wo + li * wk, wk, axis=0)
             b_pan = jnp.where(oi == p // on, b_pan, jnp.zeros_like(b_pan))
             b_pan = jax.lax.psum(b_pan, row_axis)       # group broadcast
-            acc = acc + _cannon_acc(a_pan, b_pan, inner_row, inner_col, ih)
+            acc = acc + _cannon_acc(a_pan, b_pan, inner_row, inner_col, ih,
+                                    kernel, overlap)
             return acc, None
 
         acc = jnp.zeros((a_loc.shape[0], b_loc.shape[1]), dtype=jnp.float32)
@@ -345,7 +387,9 @@ def hierarchical_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
 def outer_systolic_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
                         row_axis: str = "data", col_axis: str = "model",
                         inner_row: str = "data_in",
-                        inner_col: str = "model_in") -> jax.Array:
+                        inner_col: str = "model_in",
+                        kernel: Optional[InnerKernel] = None,
+                        overlap: bool = False) -> jax.Array:
     """Fig. 6c's systolic-over-SUMMA composition on an (outer_row ×
     inner_row × outer_col × inner_col) mesh view: Cannon's wavefront runs at
     the *group* level while each inner (ih × ih) group contracts its current
@@ -399,8 +443,16 @@ def outer_systolic_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
 
         def outer_step(carry, _):
             a_cur, b_cur, acc = carry
+            if overlap:
+                # next chunk's group-to-group hops issue before this chunk
+                # is consumed — the outer ring hides behind inner compute
+                a_nxt = jax.lax.ppermute(a_cur, col_axis, ring)
+                b_nxt = jax.lax.ppermute(b_cur, row_axis, ring)
+                acc = acc + _summa_acc(a_cur, b_cur, inner_row, inner_col,
+                                       ih, ih, kernel)
+                return (a_nxt, b_nxt, acc), None
             acc = acc + _summa_acc(a_cur, b_cur, inner_row, inner_col,
-                                   ih, ih)
+                                   ih, ih, kernel)
             a_cur = jax.lax.ppermute(a_cur, col_axis, ring)   # chunk west
             b_cur = jax.lax.ppermute(b_cur, row_axis, ring)   # chunk north
             return (a_cur, b_cur, acc), None
@@ -421,13 +473,13 @@ def outer_systolic_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
 # ---------------------------------------------------------------------------
 
 def allgather_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
-                   row_axis: str = "data", col_axis: str = "model") -> jax.Array:
+                   row_axis: str = "data", col_axis: str = "model",
+                   kernel: Optional[InnerKernel] = None) -> jax.Array:
     """Gather A's panels along cols / B's along rows once, then one local GEMM."""
     def body(a_loc, b_loc):
         a_full = jax.lax.all_gather(a_loc, col_axis, axis=1, tiled=True)
         b_full = jax.lax.all_gather(b_loc, row_axis, axis=0, tiled=True)
-        return jnp.dot(a_full, b_full,
-                       preferred_element_type=jnp.float32).astype(a_loc.dtype)
+        return _tile_dot(a_full, b_full, kernel).astype(a_loc.dtype)
 
     spec2 = P(row_axis, col_axis)
     return shard_map(body, mesh=mesh, in_specs=(spec2, spec2),
@@ -457,28 +509,35 @@ def exec_plan_gemm(a: jax.Array, b: jax.Array, mesh: Mesh,
     emesh = (exec_plan.view.materialize(mesh) if exec_plan.view is not None
              else mesh)
     mode = exec_plan.mode
+    ik = exec_plan.inner_kernel
+    ov = exec_plan.overlap
     with _mode_scope(mode):
         if mode == "auto":
             return auto_gemm(a, b, mesh, ax["row"], ax["col"])
         if mode == "summa":
-            return summa_gemm(a, b, emesh, ax["row"], ax["col"])
+            return summa_gemm(a, b, emesh, ax["row"], ax["col"], kernel=ik)
         if mode == "cannon":
-            return cannon_gemm(a, b, emesh, ax["row"], ax["col"])
+            return cannon_gemm(a, b, emesh, ax["row"], ax["col"],
+                               kernel=ik, overlap=ov)
         if mode == "allgather":
-            return allgather_gemm(a, b, emesh, ax["row"], ax["col"])
+            return allgather_gemm(a, b, emesh, ax["row"], ax["col"],
+                                  kernel=ik)
         if mode == "splitk":
             return splitk_gemm(a, b, emesh, k_axis=ax["k"],
-                               scatter=exec_plan.kwargs.get("scatter", True))
+                               scatter=exec_plan.kwargs.get("scatter", True),
+                               kernel=ik)
         if mode == "splitk_summa":
             return splitk_summa_gemm(
                 a, b, emesh, ax["row"], ax["col"], ax["k"],
-                scatter=exec_plan.kwargs.get("scatter", True))
+                scatter=exec_plan.kwargs.get("scatter", True), kernel=ik)
         if mode == "hierarchical":
             return hierarchical_gemm(a, b, emesh, ax["row"], ax["col"],
-                                     ax["inner_row"], ax["inner_col"])
+                                     ax["inner_row"], ax["inner_col"],
+                                     kernel=ik, overlap=ov)
         if mode == "outer_systolic":
             return outer_systolic_gemm(a, b, emesh, ax["row"], ax["col"],
-                                       ax["inner_row"], ax["inner_col"])
+                                       ax["inner_row"], ax["inner_col"],
+                                       kernel=ik, overlap=ov)
     raise KeyError(f"ExecPlan resolved to unknown mode {mode!r}")
 
 

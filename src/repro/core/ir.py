@@ -23,6 +23,21 @@ from repro.core.masks import TileGroup
 
 Coord = Tuple[int, int]
 
+# Canonical element-dtype name -> byte width for every dtype a deployment can
+# declare. The byte-keyed legacy map (`core.schedule.DTYPE_OF_BYTES`)
+# conflates elem_bytes=1 with int8 and 2 with float16; this name-keyed map is
+# the authoritative direction — fp8 (float8_e4m3, the GH200 preset's engine
+# dtype) and bfloat16 price and lower under their real names. numpy cannot
+# parse "float8_e4m3"/"bfloat16" without ml_dtypes, so every byte-width
+# lookup on dtype *names* must go through here first.
+ELEM_BYTES_OF_DTYPE = {
+    "int8": 1,
+    "float8_e4m3": 1,
+    "float16": 2,
+    "bfloat16": 2,
+    "float32": 4,
+}
+
 
 # ---------------------------------------------------------------------------
 # Ops
@@ -114,8 +129,11 @@ class BufferDecl:
 
     @property
     def bytes_per_slot(self) -> int:
-        import numpy as np
-        return int(self.shape[0] * self.shape[1] * np.dtype(self.dtype).itemsize)
+        eb = ELEM_BYTES_OF_DTYPE.get(self.dtype)
+        if eb is None:
+            import numpy as np
+            eb = np.dtype(self.dtype).itemsize
+        return int(self.shape[0] * self.shape[1] * eb)
 
 
 @dataclasses.dataclass

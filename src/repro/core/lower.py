@@ -48,6 +48,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
+from repro.core.schedule import INNER_VMEM_BUDGET
+
 # -- machine-readable fallback reasons --------------------------------------
 # mode changes
 NON_SQUARE_SYSTOLIC = "non_square_systolic"   # cannon needs dm == dn -> summa
@@ -63,11 +65,12 @@ N_NOT_DIVISIBLE = "n_not_divisible"           # -> auto
 K_NOT_DIVISIBLE = "k_not_divisible"           # -> auto
 # kwarg demotion (mode unchanged)
 SCATTER_M_INDIVISIBLE = "scatter_m_indivisible"  # psum_scatter -> psum
+INNER_KERNEL_TOO_LARGE = "inner_kernel_too_large"  # ik working set > VMEM -> XLA inner
 
 REASONS = (NON_SQUARE_SYSTOLIC, NON_SQUARE_INNER, INNER_GRID_MISMATCH,
            NON_SQUARE_OUTER, OUTER_RING_TOO_SMALL, GRID_MISMATCH, GK_IS_ONE,
            UNKNOWN_DATAFLOW, M_NOT_DIVISIBLE, N_NOT_DIVISIBLE,
-           K_NOT_DIVISIBLE, SCATTER_M_INDIVISIBLE)
+           K_NOT_DIVISIBLE, SCATTER_M_INDIVISIBLE, INNER_KERNEL_TOO_LARGE)
 
 # modes an ExecPlan can resolve to (superset of gemm.MODES: the 3-D split-K
 # and both hierarchical modes need a mesh view, so they are plan-only)
@@ -142,6 +145,10 @@ class ExecPlan:
     grid: Tuple[int, int, int]          # the schedule's (gm, gn, gk)
     shape: Tuple[int, int, int]         # the actual (m, n, k) lowered for
     fallbacks: Tuple[Fallback, ...] = ()
+    # resolved intra-device level: the schedule's InnerKernel (None -> XLA
+    # picks the local GEMM) and whether ring hops overlap tile compute
+    inner_kernel: Optional[Any] = None
+    overlap: bool = False
 
     @property
     def degraded(self) -> bool:
@@ -168,12 +175,18 @@ class ExecPlan:
             "degraded": self.degraded,
             "fallbacks": [{"reason": f.reason, "from": f.from_mode,
                            "to": f.to_mode} for f in self.fallbacks],
+            "inner_kernel": (self.inner_kernel.to_dict()
+                             if self.inner_kernel is not None else None),
+            "overlap": self.overlap,
         }
 
     def describe(self) -> str:
         chain = " ".join(f.describe() for f in self.fallbacks)
         gm, gn, gk = self.grid
         return (f"{self.requested}[{gm}x{gn}x{gk}] -> {self.mode}"
+                + (f" ik={self.inner_kernel.describe()}"
+                   if self.inner_kernel is not None else "")
+                + (" overlap" if self.overlap else "")
                 + (f" ({chain})" if chain else ""))
 
 
@@ -355,9 +368,22 @@ def lower_schedule(schedule, mesh, row_axis: str = "data",
         mode, view = "auto", None
         axes, kwargs = {"row": row_axis, "col": col_axis}, {}
 
+    # -- 3. intra-device level: inner kernel + ring/compute overlap ----------
+    ik = getattr(schedule, "inner_kernel", None)
+    ov = bool(getattr(schedule, "overlap", False))
+    if mode == "auto":
+        # XLA owns the whole einsum — no inner kernel or ring to overlap;
+        # the auto fallback reason above already covers the degradation
+        ik, ov = None, False
+    elif ik is not None and ik.working_set_bytes() > INNER_VMEM_BUDGET:
+        # kwarg-style demotion (mode unchanged): drop to the XLA-picked
+        # local GEMM rather than dispatch a kernel that cannot fit VMEM
+        fall(INNER_KERNEL_TOO_LARGE, mode, mode)
+        ik = None
+
     return ExecPlan(mode=mode, axes=axes, kwargs=kwargs, view=view,
                     requested=df, grid=grid, shape=(m, n, k),
-                    fallbacks=tuple(fallbacks))
+                    fallbacks=tuple(fallbacks), inner_kernel=ik, overlap=ov)
 
 
 def lowering_summary(plans: Sequence[ExecPlan]) -> Dict[str, Any]:

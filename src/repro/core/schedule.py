@@ -17,9 +17,16 @@ import math
 from typing import Dict, Optional, Tuple
 
 from repro.core import layout as layout_lib
-from repro.core.ir import Program
+from repro.core.ir import ELEM_BYTES_OF_DTYPE, Program
 from repro.core.remap import ClusterRemap
 from repro.hw.config import AcceleratorConfig
+
+# Dispatch-time working-set budget for an inner kernel (bytes). A v5e has
+# ~128 MB VMEM but Pallas double-buffers every operand block, so the planner
+# and `kernels/ops.pick_block_shape` share this much tighter cap; lowering
+# demotes (reason `inner_kernel_too_large`) any persisted kernel that
+# exceeds it instead of letting the dispatch OOM VMEM.
+INNER_VMEM_BUDGET = 8 * 1024 * 1024
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +85,72 @@ class Tiling:
             raise ValueError(f"K_local={k_local} not divisible by tk={self.tk}")
 
 
+@dataclasses.dataclass(frozen=True)
+class InnerKernel:
+    """Second schedule level: the intra-device (per-tile) kernel geometry.
+
+    The outer `Tiling` maps the GEMM onto the tile grid; an `InnerKernel`
+    maps each tile's local (TM x TN x K) contraction onto its matrix engine
+    — block shape, operand pipeline depth, and compute element dtype. On the
+    TPU target it parameterizes the Pallas `kernels/mmad` kernel (BlockSpec
+    geometry + double-buffered VMEM streaming); in the cost model it prices
+    MXU occupancy, pipeline refills per `bk` chunk, and the feed bandwidth
+    at the kernel's element width. Frozen + hashable so it can ride on a
+    `Schedule`, an `ExecPlan`, and through `jax.custom_vjp` nondiff args.
+    """
+    bm: int
+    bn: int
+    bk: int
+    # operand pipeline depth: 2 = double-buffered (the next block streams
+    # while the current one computes), 1 = serialized fetch/compute.
+    depth: int = 2
+    # compute element dtype (accumulation is always fp32); "" inherits the
+    # schedule's element dtype at dispatch/pricing time.
+    dtype: str = ""
+
+    def elem_bytes(self, default: int = 4) -> int:
+        return ELEM_BYTES_OF_DTYPE.get(self.dtype, default)
+
+    def geometry(self) -> Tuple[int, int, int]:
+        return (self.bm, self.bn, self.bk)
+
+    def working_set_bytes(self, default_elem_bytes: int = 4) -> int:
+        """Pipelined A/B blocks + the fp32 accumulator block."""
+        eb = self.elem_bytes(default_elem_bytes)
+        depth = max(1, self.depth)
+        return ((self.bm * self.bk + self.bk * self.bn) * eb * depth
+                + self.bm * self.bn * 4)
+
+    def validate(self, budget: int = INNER_VMEM_BUDGET) -> None:
+        """Legality rules, mirroring `Tiling.validate`."""
+        if min(self.bm, self.bn, self.bk) < 1:
+            raise ValueError(f"inner kernel blocks must be positive, got "
+                             f"{self.bm}x{self.bn}x{self.bk}")
+        if self.depth < 1:
+            raise ValueError(f"pipeline depth must be >= 1, got {self.depth}")
+        if self.dtype and self.dtype not in ELEM_BYTES_OF_DTYPE:
+            raise ValueError(f"unknown inner-kernel dtype {self.dtype!r}; "
+                             f"have {sorted(ELEM_BYTES_OF_DTYPE)}")
+        ws = self.working_set_bytes()
+        if ws > budget:
+            raise ValueError(f"inner-kernel working set {ws} exceeds the "
+                             f"{budget}-byte VMEM budget")
+
+    def to_dict(self) -> Dict[str, object]:
+        return {"bm": self.bm, "bn": self.bn, "bk": self.bk,
+                "depth": self.depth, "dtype": self.dtype}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "InnerKernel":
+        return cls(bm=int(d["bm"]), bn=int(d["bn"]), bk=int(d["bk"]),
+                   depth=int(d.get("depth", 2)),
+                   dtype=str(d.get("dtype", "")))
+
+    def describe(self) -> str:
+        dt = f":{self.dtype}" if self.dtype else ""
+        return f"{self.bm}x{self.bn}x{self.bk}d{self.depth}{dt}"
+
+
 # every name has both a BSP builder (build_program, simulator/cost model)
 # and an explicit mesh lowering (repro.core.lower) — the two hierarchical
 # compositions resolve to distinct ExecPlan modes (systolic_over_summa ->
@@ -107,12 +180,108 @@ class Schedule:
     # L1 accumulator precision (4 = fp32; 2 models fp16 accumulation, which
     # the fp8 deployment needs for very large C tiles to fit 384 KB L1).
     acc_bytes: int = 4
+    # explicit element dtype name ("" = resolved from elem_bytes + the
+    # hardware's native dtype; see `elem_dtype_name`) — fp8 deployments
+    # price and lower as float8_e4m3, not as the byte-width's int8 default.
+    elem_dtype: str = ""
+    # second schedule level: the per-tile kernel geometry (None = the
+    # target's default kernel, i.e. whatever XLA picks for the local dot).
+    inner_kernel: Optional[InnerKernel] = None
+    # overlap the ring dataflows' ppermute hops with inner-tile compute
+    # (issue the collective for step s+1 before consuming step s's panels).
+    # No-op for the broadcast dataflows, which consume a panel in the same
+    # superstep it arrives.
+    overlap: bool = False
 
     def describe(self) -> str:
         t = self.tiling
         r = f" remap={self.remap.logical}" if self.remap else ""
+        ik = f" ik={self.inner_kernel.describe()}" if self.inner_kernel else ""
+        ov = " overlap" if self.overlap else ""
         return (f"{self.dataflow}[{t.gm}x{t.gn}x{t.gk} iters=({t.iter_m},{t.iter_n}) "
-                f"tk={t.tk}]{r} db={int(self.double_buffer)} stages={self.store_stages}")
+                f"tk={t.tk}]{r} db={int(self.double_buffer)} "
+                f"stages={self.store_stages}{ik}{ov}")
+
+
+# byte-width -> default dtype name, the legacy direction (re-exported by
+# core.dataflow.common for its existing importers). Lossy on purpose — 1
+# byte could be int8 OR float8_e4m3 — which is why `elem_dtype_name` below
+# consults the schedule's and the hardware's explicit dtype first.
+DTYPE_OF_BYTES = {1: "int8", 2: "float16", 4: "float32"}
+
+
+def elem_dtype_name(sched: Schedule,
+                    hw: Optional[AcceleratorConfig] = None) -> str:
+    """The element dtype a schedule deploys under.
+
+    Resolution order: the schedule's explicit `elem_dtype`; the hardware's
+    native engine dtype when its byte width matches the schedule's
+    `elem_bytes` (the GH200 preset's fp8); the legacy byte-width default.
+    """
+    if sched.elem_dtype:
+        return sched.elem_dtype
+    hw_dt = getattr(getattr(hw, "tile", None), "elem_dtype", "")
+    if hw_dt and ELEM_BYTES_OF_DTYPE.get(hw_dt) == sched.elem_bytes:
+        return hw_dt
+    return DTYPE_OF_BYTES[sched.elem_bytes]
+
+
+def default_elem_dtype(elem_bytes: int,
+                       hw: Optional[AcceleratorConfig] = None) -> str:
+    """`elem_dtype_name` for candidate generators that only have the byte
+    width: the hardware's native dtype when the widths agree, else the
+    legacy byte-width default."""
+    hw_dt = getattr(getattr(hw, "tile", None), "elem_dtype", "")
+    if hw_dt and ELEM_BYTES_OF_DTYPE.get(hw_dt) == elem_bytes:
+        return hw_dt
+    return DTYPE_OF_BYTES[elem_bytes]
+
+
+def _aligned_block(dim: int, unit: int) -> int:
+    """Largest of {4, 2, 1} x `unit` that divides `dim` (falling back to the
+    dim itself) — an engine-aligned block edge with no padding waste."""
+    for mult in (4, 2, 1):
+        b = unit * mult
+        if b <= dim and dim % b == 0:
+            return b
+    return dim
+
+
+def inner_kernel_candidates(sched: Schedule, hw: AcceleratorConfig,
+                            max_candidates: int = 3) -> Tuple[InnerKernel, ...]:
+    """Closed-form inner-kernel shortlist for one outer schedule.
+
+    Mirrors the analytic shortlist's derivation style at the second tiling
+    level: block edges are the largest engine-aligned divisors of the tile
+    dims (MXU occupancy), `bk` sweeps down from the full K-chunk (larger bk
+    amortizes pipeline refills and the accumulator flush), and the pipeline
+    depth degrades from double-buffered to serialized only when the deeper
+    working set cannot fit the VMEM budget. Deterministic and ordered
+    best-prior-first, so the pricing sweep's tie-break (first strict
+    minimum wins) prefers the planner-visible kernel over the opaque
+    XLA-default path at equal predicted cost.
+    """
+    tm, tn, k_local = sched.tiling.tile_dims(sched.shape)
+    tk = min(sched.tiling.tk, k_local)
+    if min(tm, tn, tk) < 1:
+        return ()
+    dtype = elem_dtype_name(sched, hw)
+    t = hw.tile
+    bm = _aligned_block(tm, t.ce_rows)
+    bn = _aligned_block(tn, t.ce_cols)
+    budget = min(t.l1_bytes, INNER_VMEM_BUDGET)
+    out = []
+    for bk in (tk, tk // 2, tk // 4):
+        if bk < 1 or tk % bk:
+            continue
+        for depth in (2, 1):
+            ik = InnerKernel(bm, bn, bk, depth=depth, dtype=dtype)
+            if ik.working_set_bytes() <= budget:
+                out.append(ik)
+                break           # deeper pipeline strictly dominates at a bk
+        if len(out) >= max_candidates:
+            break
+    return tuple(out)
 
 
 def resolve_layouts(sched: Schedule, hw: AcceleratorConfig) -> Dict[str, layout_lib.DataLayout]:

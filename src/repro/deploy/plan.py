@@ -18,7 +18,7 @@ from typing import Any, Dict
 
 from repro.core import layout as layout_lib
 from repro.core.remap import ClusterRemap
-from repro.core.schedule import GEMMShape, Schedule, Tiling
+from repro.core.schedule import GEMMShape, InnerKernel, Schedule, Tiling
 from repro.hw.config import AcceleratorConfig
 from repro.sim.perf import PerfReport
 
@@ -78,6 +78,10 @@ def schedule_to_dict(sched: Schedule) -> Dict[str, Any]:
         "reduce_owner": sched.reduce_owner,
         "elem_bytes": sched.elem_bytes,
         "acc_bytes": sched.acc_bytes,
+        "elem_dtype": sched.elem_dtype,
+        "inner_kernel": (sched.inner_kernel.to_dict()
+                         if sched.inner_kernel is not None else None),
+        "overlap": sched.overlap,
     }
 
 
@@ -101,6 +105,12 @@ def schedule_from_dict(d: Dict[str, Any]) -> Schedule:
         reduce_owner=d["reduce_owner"],
         elem_bytes=d["elem_bytes"],
         acc_bytes=d["acc_bytes"],
+        # two-level fields: absent in pre-inner-kernel plans (same schema
+        # version — readers tolerate their absence, writers always emit)
+        elem_dtype=d.get("elem_dtype", ""),
+        inner_kernel=(InnerKernel.from_dict(d["inner_kernel"])
+                      if d.get("inner_kernel") else None),
+        overlap=bool(d.get("overlap", False)),
     )
 
 

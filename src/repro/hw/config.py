@@ -28,6 +28,11 @@ class TileConfig:
     l1_bw: float = 512e9
     # element size the engine natively computes in (fp8 in the paper's GH200 config).
     elem_bytes: int = 1
+    # element dtype name the engine natively computes in. Disambiguates the
+    # byte width (1 byte = fp8 here, not int8; 2 bytes = bf16 on TPU, not
+    # fp16). "" means "no native preference" — pricing/lowering fall back to
+    # the legacy byte-width default. Accumulation is fp32 regardless.
+    elem_dtype: str = "float8_e4m3"
 
     @property
     def macs_per_cycle(self) -> int:
@@ -98,7 +103,8 @@ def softhier_gh200() -> AcceleratorConfig:
         name="softhier-gh200",
         grid=(32, 32),
         tile=TileConfig(ce_rows=64, ce_cols=16, peak_flops=1.93e12,
-                        l1_bytes=384 * 1024, l1_bw=512e9, elem_bytes=1),
+                        l1_bytes=384 * 1024, l1_bw=512e9, elem_bytes=1,
+                        elem_dtype="float8_e4m3"),
         noc=NoCConfig(link_bits=4096, link_bw=512e9),
         hbm=HBMConfig(n_channels=64, channel_bw=64e9),
     )
@@ -110,7 +116,8 @@ def softhier_a100() -> AcceleratorConfig:
         name="softhier-a100",
         grid=(16, 16),
         tile=TileConfig(ce_rows=32, ce_cols=16, peak_flops=312e12 / 256,
-                        l1_bytes=256 * 1024, l1_bw=512e9, elem_bytes=2),
+                        l1_bytes=256 * 1024, l1_bw=512e9, elem_bytes=2,
+                        elem_dtype="float16"),
         noc=NoCConfig(link_bits=2048, link_bw=256e9),
         hbm=HBMConfig(n_channels=32, channel_bw=1.56e12 / 32),
     )
@@ -145,7 +152,8 @@ def tpu_pod_as_accelerator(grid: Tuple[int, int] = (16, 16)) -> AcceleratorConfi
         name=f"tpu-v5e-{grid[0]}x{grid[1]}",
         grid=grid,
         tile=TileConfig(ce_rows=128, ce_cols=128, peak_flops=c.peak_flops_bf16,
-                        l1_bytes=c.vmem_bytes, l1_bw=c.hbm_bw, elem_bytes=2),
+                        l1_bytes=c.vmem_bytes, l1_bw=c.hbm_bw, elem_bytes=2,
+                        elem_dtype="bfloat16"),
         noc=NoCConfig(link_bits=8 * int(c.ici_link_bw / 1e9), link_bw=c.ici_link_bw,
                       hw_collectives=True),
         hbm=HBMConfig(n_channels=grid[0] * grid[1], channel_bw=c.hbm_bw,

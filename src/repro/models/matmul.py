@@ -110,7 +110,12 @@ def _dispatch_routed(ctx, x: jax.Array, w: jax.Array, shape: GEMMShape,
             ctx.stats.analytic += 1
     if plan is None:
         ctx.stats.fallback += 1
-        prov.update(provenance="fallback", mode="auto")
+        # inner_kernel/overlap are part of the per-dispatch contract: every
+        # dispatch record carries them (None/False = XLA-picked local GEMM),
+        # so drift monitoring can attribute a regression to the inner level
+        # without special-casing fallbacks
+        prov.update(provenance="fallback", mode="auto",
+                    inner_kernel=None, overlap=False)
         return dit_gemm(x, w, ctx.mesh, mode="auto", row_axis=ctx.row_axis,
                         col_axis=ctx.col_axis)
     # lower the tuned schedule here (not inside dit_gemm) so the resolved
@@ -121,7 +126,10 @@ def _dispatch_routed(ctx, x: jax.Array, w: jax.Array, shape: GEMMShape,
                                ctx.row_axis, ctx.col_axis, shape=shape)
     ctx.stats.record_lowering(exec_plan)
     prov.update(provenance=kind, mode=exec_plan.mode,
-                reasons=list(exec_plan.reasons()))
+                reasons=list(exec_plan.reasons()),
+                inner_kernel=(exec_plan.inner_kernel.to_dict()
+                              if exec_plan.inner_kernel is not None else None),
+                overlap=exec_plan.overlap)
     report = getattr(plan, "report", None)
     if report is not None:
         prov["predicted_s"] = report.total_time

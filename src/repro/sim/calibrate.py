@@ -420,18 +420,22 @@ DEFAULT_GEMM_GRID: Tuple[Tuple[int, int, int], ...] = (
 def build_mode_schedule(dataflow: str, knobs: Dict[str, object],
                         rows: int, cols: int,
                         shape: Tuple[int, int, int],
-                        elem_bytes: int = 1) -> Schedule:
+                        elem_bytes: int = 1,
+                        inner_kernel=None, overlap: bool = False) -> Schedule:
     """The Schedule for one MODE_CASES row on a rows x cols grid.
 
     The k sub-axis factors out of the column axis (gm * gn * gk covers the
     grid exactly), so the same schedule both prices with the analytical
     model on an `AcceleratorConfig` of that grid AND lowers to exactly its
-    labelled mode on the matching mesh.
+    labelled mode on the matching mesh. `inner_kernel`/`overlap` pass
+    through to the schedule so the kernel benchmark can measure the same
+    mode with and without the intra-device level engaged.
     """
     gk = int(knobs.get("gk", 1))
     return Schedule(GEMMShape(*shape), Tiling(rows, cols // gk, gk, tk=64),
                     dataflow, reduce_owner=str(knobs.get("owner", "first")),
-                    inner=(2, 2), elem_bytes=elem_bytes)
+                    inner=(2, 2), elem_bytes=elem_bytes,
+                    inner_kernel=inner_kernel, overlap=overlap)
 
 
 def time_best_of(fn, a, b, reps: int) -> float:

@@ -34,10 +34,12 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 
-from repro.core.ir import DMAOp, MMADOp, MulticastOp, P2POp, Program, ReduceOp
+from repro.core.ir import (ELEM_BYTES_OF_DTYPE, DMAOp, MMADOp, MulticastOp,
+                           P2POp, Program, ReduceOp)
 from repro.core.masks import TileGroup
+from repro.core.schedule import InnerKernel
 from repro.hw.config import AcceleratorConfig
 
 
@@ -120,35 +122,101 @@ class PerfReport:
                 f"steps={self.n_supersteps}")
 
 
-def _engine_time(op: MMADOp, hw: AcceleratorConfig) -> float:
+def _engine_time(op: MMADOp, hw: AcceleratorConfig,
+                 inner: Optional[InnerKernel] = None) -> float:
+    """Per-tile matrix-engine time for one MMAD, optionally under a tuned
+    `InnerKernel`.
+
+    `inner=None` is the legacy single-level model (XLA/firmware picks the
+    intra-tile loop): one pipeline fill per output chunk, operands fed at the
+    hardware's native element width.
+
+    With an inner kernel the geometry terms become visible to the planner:
+
+    - **MXU occupancy**: the (tm x tn) tile splits into ceil(tm/bm) *
+      ceil(tn/bn) blocks, each issuing ceil(bm/ce_rows) * ceil(bn/ce_cols)
+      engine passes — a bm/bn misaligned with the CE array wastes array rows
+      exactly as the paper's §4.1.3 TN=66 case does.
+    - **accumulator-flush / pipeline-fill amortization vs bk**: each block
+      runs ceil(tk/bk) K-chunks; a double-buffered pipeline (depth >= 2)
+      pays the (ce_rows + ce_cols)-cycle fill once per engine pass, while a
+      serialized pipeline (depth 1) re-fills every K-chunk AND exposes the
+      L1 feed time instead of hiding it behind compute.
+    - **fp8-aware feed**: operands stream at the *kernel's* element width, so
+      a narrower compute dtype relieves a feed-bound tile (the paper's
+      1979 TFLOPS@FP8 headline is exactly this term at full scale).
+
+    An aligned kernel (bm | tm with ce_rows | bm, ditto bn, bk == tk,
+    depth >= 2, dtype at the native width) prices EXACTLY like the legacy
+    model — candidate sweeps tie instead of fabricating a difference.
+    """
     t = hw.tile
-    chunks = math.ceil(op.tm / t.ce_rows) * math.ceil(op.tn / t.ce_cols)
-    cycles = chunks * (op.tk + t.ce_rows + t.ce_cols)
+    fill = t.ce_rows + t.ce_cols
+    if inner is None:
+        chunks = math.ceil(op.tm / t.ce_rows) * math.ceil(op.tn / t.ce_cols)
+        cycles = chunks * (op.tk + fill)
+        engine = cycles / t.clock_hz
+        feed_bytes = (op.tm * op.tk + op.tk * op.tn) * t.elem_bytes
+        return max(engine, feed_bytes / t.l1_bw)
+
+    blocks = math.ceil(op.tm / inner.bm) * math.ceil(op.tn / inner.bn)
+    sub = (math.ceil(min(inner.bm, op.tm) / t.ce_rows)
+           * math.ceil(min(inner.bn, op.tn) / t.ce_cols))
+    kchunks = math.ceil(op.tk / inner.bk)
+    fills = fill if inner.depth >= 2 else kchunks * fill
+    cycles = blocks * sub * (kchunks * inner.bk + fills)
     engine = cycles / t.clock_hz
-    feed_bytes = (op.tm * op.tk + op.tk * op.tn) * t.elem_bytes
-    return max(engine, feed_bytes / t.l1_bw)
+    eb = ELEM_BYTES_OF_DTYPE.get(inner.dtype, t.elem_bytes)
+    feed = (op.tm * op.tk + op.tk * op.tn) * eb / t.l1_bw
+    return max(engine, feed) if inner.depth >= 2 else engine + feed
 
 
-def estimate(prog: Program, hw: AcceleratorConfig) -> PerfReport:
-    elem = {"int8": 1, "float16": 2, "float32": 4}
+# -- two-phase estimation ----------------------------------------------------
+# Communication pricing (DMA channel contention, NoC link trees, barrier) is
+# independent of the inner kernel; only the compute phase changes. The sweep
+# over inner-kernel candidates in `price_candidates` therefore runs the
+# expensive comm pass ONCE per program and recombines per kernel.
+
+@dataclasses.dataclass
+class _StepProfile:
+    comp: List[Tuple[Tuple[int, int], Tuple[int, int, int]]]  # (tile, dims)
+    d_time: float
+    n_time: float
+    chained: bool
+
+
+@dataclasses.dataclass
+class _CommProfile:
+    steps: List[_StepProfile]
+    barrier: float
+    flops: int
+    hbm_bytes: int
+    noc_bytes: int
+
+
+def _comm_profile(prog: Program, hw: AcceleratorConfig) -> _CommProfile:
     grid = prog.grid
     barrier = (grid[0] + grid[1]) * hw.noc.hop_latency_cycles / hw.tile.clock_hz
 
-    tot = comp_t = dma_t = noc_t = 0.0
     flops = 0
     hbm_bytes = 0
     noc_bytes = 0
+    steps: List[_StepProfile] = []
 
-    buf_bytes = {name: decl.shape[0] * decl.shape[1] * elem[decl.dtype]
-                 for name, decl in prog.buffers.items()}
+    buf_bytes = {}
+    for name, decl in prog.buffers.items():
+        eb = ELEM_BYTES_OF_DTYPE.get(decl.dtype)
+        if eb is None:
+            raise KeyError(f"buffer {name!r} has unpriceable dtype "
+                           f"{decl.dtype!r}; add it to ELEM_BYTES_OF_DTYPE")
+        buf_bytes[name] = decl.shape[0] * decl.shape[1] * eb
 
     for step in prog.supersteps:
-        # -- compute phase
-        per_tile: Dict[Tuple[int, int], float] = {}
+        # -- compute phase: record op dims, priced later per inner kernel
+        comp: List[Tuple[Tuple[int, int], Tuple[int, int, int]]] = []
         for op in step.compute:
-            per_tile[op.tile] = per_tile.get(op.tile, 0.0) + _engine_time(op, hw)
+            comp.append((op.tile, (op.tm, op.tn, op.tk)))
             flops += 2 * op.tm * op.tn * op.tk
-        c_time = max(per_tile.values(), default=0.0)
 
         # -- DMA phase: channel + L1-port contention
         chan_bytes: Dict[int, int] = {}
@@ -230,17 +298,62 @@ def estimate(prog: Program, hw: AcceleratorConfig) -> PerfReport:
         # a multicast chained off a same-superstep owner DMA serializes the
         # DMA and NoC phases (fetch -> fabric multicast dependency).
         chained = any(isinstance(op, MulticastOp) and op.after_dma for op in step.comm)
-        comm_time = d_time + n_time if chained else max(d_time, n_time)
-        tot += max(c_time, comm_time) + barrier
+        steps.append(_StepProfile(comp=comp, d_time=d_time, n_time=n_time,
+                                  chained=chained))
+
+    return _CommProfile(steps=steps, barrier=barrier, flops=flops,
+                        hbm_bytes=hbm_bytes, noc_bytes=noc_bytes)
+
+
+def _combine(prog: Program, hw: AcceleratorConfig, profile: _CommProfile,
+             inner: Optional[InnerKernel]) -> PerfReport:
+    """Recombine a comm profile with the compute phase under one inner
+    kernel. With `inner=None` this reproduces the single-pass estimate
+    bit-identically (same op order, same float additions)."""
+    tot = comp_t = dma_t = noc_t = 0.0
+    etime: Dict[Tuple[int, int, int], float] = {}
+    for step in profile.steps:
+        per_tile: Dict[Tuple[int, int], float] = {}
+        for tile, dims in step.comp:
+            e = etime.get(dims)
+            if e is None:
+                tm, tn, tk = dims
+                e = etime[dims] = _engine_time(
+                    MMADOp(tile=tile, a_buf="A", a_slot=0, b_buf="B",
+                           b_slot=0, tm=tm, tn=tn, tk=tk), hw, inner)
+            per_tile[tile] = per_tile.get(tile, 0.0) + e
+        c_time = max(per_tile.values(), default=0.0)
+        comm_time = (step.d_time + step.n_time if step.chained
+                     else max(step.d_time, step.n_time))
+        tot += max(c_time, comm_time) + profile.barrier
         comp_t += c_time
-        dma_t += d_time
-        noc_t += n_time
+        dma_t += step.d_time
+        noc_t += step.n_time
 
     return PerfReport(total_time=tot, compute_time=comp_t, dma_time=dma_t,
                       noc_time=noc_t,
-                      barrier_time=barrier * len(prog.supersteps),
-                      total_flops=flops, hbm_bytes=hbm_bytes,
-                      noc_bytes=noc_bytes, n_supersteps=len(prog.supersteps))
+                      barrier_time=profile.barrier * len(profile.steps),
+                      total_flops=profile.flops,
+                      hbm_bytes=profile.hbm_bytes,
+                      noc_bytes=profile.noc_bytes,
+                      n_supersteps=len(profile.steps))
+
+
+def estimate(prog: Program, hw: AcceleratorConfig,
+             inner: Optional[InnerKernel] = None) -> PerfReport:
+    return _combine(prog, hw, _comm_profile(prog, hw), inner)
+
+
+def estimate_sweep(prog: Program, hw: AcceleratorConfig,
+                   inners: Iterable[Optional[InnerKernel]]
+                   ) -> Iterator[Tuple[Optional[InnerKernel], PerfReport]]:
+    """Price one program under several inner kernels, running the expensive
+    communication pass once. Yields (inner, report) in the given order —
+    callers that keep the first strict minimum therefore inherit the
+    sweep's tie-break ordering."""
+    profile = _comm_profile(prog, hw)
+    for inner in inners:
+        yield inner, _combine(prog, hw, profile, inner)
 
 
 def _matrix_shape(prog: Program, matrix: str) -> Tuple[int, int]:

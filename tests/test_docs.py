@@ -77,6 +77,7 @@ def test_calibrate_flag_exists_and_is_documented():
     "## BENCH_calibration.json",
     "## BENCH_tracing.json",
     "## BENCH_analytic.json",
+    "## BENCH_kernel.json",
 ])
 def test_bench_artifact_sections_present(section):
     """CI's assertions reference these artifacts by name; the schema doc
@@ -117,6 +118,8 @@ def test_run_report_flag_exists_and_is_documented():
     # the run-report keys CI asserts on / launchers render from
     "schema_version", "silent_degrades", "resolve_rate", "dispatches",
     "plan_digest", "calibration_digest", "plan_resolve_us", "provenance",
+    # the two-level dispatch contract: every dispatch row carries them
+    "inner_kernel", "overlap",
     # the drift-summary keys the staleness decision hangs on
     "profile_stale", "geomean_ratio", "drift_distance",
     "DRIFT_STALE_THRESHOLD",
@@ -172,6 +175,35 @@ def test_analytic_schema_fields_documented(field):
     assert field in _read(BENCHMARKING_MD), (
         f"BENCH_analytic.json field {field!r} is asserted by CI but "
         f"missing from docs/benchmarking.md")
+
+
+@pytest.mark.parametrize("field", [
+    # the BENCH_kernel.json keys CI asserts on
+    "local_kernel", "routed_modes", "inner_match_rate", "kernel_pick_rate",
+    "geomean_ratio",
+])
+def test_kernel_schema_fields_documented(field):
+    assert field in _read(BENCHMARKING_MD), (
+        f"BENCH_kernel.json field {field!r} is asserted by CI but "
+        f"missing from docs/benchmarking.md")
+
+
+def test_two_level_schedule_documented():
+    """The inner level's surface stays pinned: every InnerKernel field
+    name, the Schedule flags, and the VMEM demotion budget appear in the
+    dataflows doc's two-level section."""
+    import dataclasses as dc
+
+    from repro.core.schedule import InnerKernel
+    text = _read(DATAFLOWS_MD)
+    for f in dc.fields(InnerKernel):
+        assert f.name in text, (
+            f"InnerKernel field {f.name!r} missing from docs/dataflows.md")
+    for needle in ("inner_kernel", "overlap", "INNER_VMEM_BUDGET",
+                   "local_matmul"):
+        assert needle in text, (
+            f"two-level schedule surface {needle!r} missing from "
+            f"docs/dataflows.md")
 
 
 def _markdown_files():

@@ -81,6 +81,65 @@ PLAN_BODY = textwrap.dedent("""
 """)
 
 
+KERNEL_BODY = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.gemm import dit_gemm
+    from repro.core.lower import lower_schedule
+    from repro.core.schedule import GEMMShape, InnerKernel, Schedule, Tiling
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    rng = np.random.default_rng(0)
+    M, K, N = 64, 128, 64
+    a = jnp.asarray(rng.standard_normal((M, K)), dtype=jnp.float32)
+    b = jnp.asarray(rng.standard_normal((K, N)), dtype=jnp.float32)
+    ref = np.asarray(a @ b)
+
+    def routed(sched):
+        ep = lower_schedule(sched, mesh, "data", "model", shape=(M, N, K))
+        assert not ep.degraded, ep.describe()
+        return ep, np.asarray(jax.jit(
+            lambda x, y, e=ep: dit_gemm(x, y, mesh, exec_plan=e))(a, b))
+
+    ik = InnerKernel(32, 32, 32, dtype="float32")
+    for df, overlap in (("summa", False), ("systolic", False),
+                        ("systolic", True), ("splitk_summa", False)):
+        gk = 2 if df == "splitk_summa" else 1
+        base = Schedule(GEMMShape(M, N, K), Tiling(2, 2 // gk, gk, tk=32),
+                        df, reduce_owner="round_robin" if gk > 1 else "first")
+        two = dataclasses.replace(base, inner_kernel=ik, overlap=overlap)
+        ep_off, out_off = routed(base)
+        ep_on, out_on = routed(two)
+        assert ep_on.inner_kernel == ik, ep_on.describe()
+        assert ep_on.overlap == overlap, ep_on.describe()
+        # on CPU the kernel path IS the jnp.dot oracle and overlap is a
+        # pure reordering: engaging the inner level must be BITWISE free
+        np.testing.assert_array_equal(out_on, out_off)
+        np.testing.assert_allclose(out_on, ref, rtol=1e-4, atol=1e-4)
+        print("OK kernel", df, "overlap=", overlap)
+
+    # grad parity through the routed, kernel-aware ring with overlap on
+    ep, _ = routed(Schedule(GEMMShape(M, N, K), Tiling(2, 2, 1, tk=32),
+                            "systolic", inner_kernel=ik, overlap=True))
+    def loss_routed(x, y):
+        return (dit_gemm(x, y, mesh, exec_plan=ep) ** 2).sum()
+    def loss_ref(x, y):
+        return (jnp.dot(x, y, preferred_element_type=jnp.float32) ** 2).sum()
+    ga_r, gb_r = jax.grad(loss_routed, argnums=(0, 1))(a, b)
+    ga_o, gb_o = jax.grad(loss_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(np.asarray(ga_r), np.asarray(ga_o),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gb_r), np.asarray(gb_o),
+                               rtol=1e-4, atol=1e-4)
+    print("OK grad")
+    print("ALL_OK")
+""")
+
+
 def _run_subprocess(body):
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
@@ -100,3 +159,11 @@ def test_gemm_modes_multidevice():
 def test_plan_driven_dispatch_multidevice():
     """dit_gemm(plan=...) resolves the tuned dataflow to the right mode."""
     _run_subprocess(PLAN_BODY)
+
+
+@pytest.mark.slow
+def test_inner_kernel_and_overlap_multidevice():
+    """Engaging the schedule's inner level (kernel + ring overlap) is
+    bitwise free on the CPU mesh and differentiable through the routed
+    path."""
+    _run_subprocess(KERNEL_BODY)

@@ -1,18 +1,31 @@
 """Per-kernel validation: shape/dtype sweeps of the Pallas kernels in
-interpret mode against the pure-jnp oracles."""
+interpret mode against the pure-jnp oracles, plus the `local_matmul`
+parity contract the mesh dataflows rely on: on CPU the schedule-resolved
+local GEMM is BITWISE the `jnp.dot` fp32 oracle (routing through the
+kernel funnel must not move routed numerics on this host), casts never
+narrow the data, and gradients flow through the custom_vjp.
+
+The property-based tests need hypothesis (requirements-dev.txt); the
+parity and contract tests run without it so the local fast lane still
+covers the dispatch path.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis "
-                    "(requirements-dev.txt)")
-from hypothesis import given, settings
-from hypothesis import strategies as st
-
+from repro.core.schedule import InnerKernel
 from repro.kernels import ref
 from repro.kernels.mmad import mmad
-from repro.kernels.ops import pick_block_shape, tile_matmul
+from repro.kernels.ops import (_VMEM_BUDGET, local_matmul, pick_block_shape,
+                               tile_matmul)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # CI installs requirements-dev; local lane may not
+    HAVE_HYPOTHESIS = False
 
 RNG = np.random.default_rng(42)
 
@@ -62,14 +75,127 @@ def test_mmad_rejects_ragged():
         mmad(a, b, block_shape=(128, 128, 128), interpret=True)
 
 
-@given(m=st.integers(1, 300), k=st.integers(1, 300), n=st.integers(1, 300))
-@settings(max_examples=12, deadline=None)
-def test_tile_matmul_padding_property(m, k, n):
-    """tile_matmul must agree with the oracle for ANY shape (pads internally)."""
-    a = jnp.asarray(RNG.standard_normal((m, k)), dtype=jnp.float32)
-    b = jnp.asarray(RNG.standard_normal((k, n)), dtype=jnp.float32)
-    out = tile_matmul(a, b, interpret=True, use_kernel=True)
-    np.testing.assert_allclose(out, a @ b, rtol=1e-3, atol=1e-3)
+# ---------------------------------------------------------------------------
+# local_matmul: the schedule-resolved per-device GEMM
+# ---------------------------------------------------------------------------
+
+def _oracle(a, b):
+    """The exact expression the mesh dataflows used before routing was
+    kernel-aware — the bitwise bar for the CPU path."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+KER32 = InnerKernel(128, 128, 128, dtype="float32")
+
+
+def test_local_matmul_cpu_bitwise_oracle():
+    """On CPU (non-interpret) the kernel path IS the oracle, bit for bit —
+    enabling inner kernels cannot move routed numerics on this host."""
+    a, b = _mk(192, 256, 160, jnp.float32)
+    out = local_matmul(a, b, KER32)
+    assert out.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(_oracle(a, b)))
+
+
+@pytest.mark.parametrize("dtype_name,jdt,tol", [
+    ("float32", jnp.float32, 1e-4),
+    ("bfloat16", jnp.bfloat16, 1e-2),
+    ("float8_e4m3", jnp.float8_e4m3fn, 1e-2),
+], ids=["f32", "bf16", "fp8"])
+def test_local_matmul_interpret_matches_oracle(dtype_name, jdt, tol):
+    """interpret=True runs the real Pallas mmad at the kernel's geometry;
+    products of the (already-quantized) operands are exact in the fp32
+    accumulator, so only accumulation order separates it from the oracle.
+    Ragged shape exercises the padding path."""
+    a32, b32 = _mk(160, 192, 224, jnp.float32)
+    a, b = a32.astype(jdt), b32.astype(jdt)
+    kernel = InnerKernel(128, 128, 128, dtype=dtype_name)
+    out = local_matmul(a, b, kernel, True)
+    want = _oracle(a.astype(jnp.float32), b.astype(jnp.float32))
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_local_matmul_never_downcasts():
+    """An fp8 kernel on fp32 data must NOT quantize — precision is the
+    model's call, not the scheduler's. Output stays bitwise the oracle."""
+    a, b = _mk(128, 256, 128, jnp.float32)
+    kernel = InnerKernel(128, 128, 128, dtype="float8_e4m3")
+    np.testing.assert_array_equal(np.asarray(local_matmul(a, b, kernel)),
+                                  np.asarray(_oracle(a, b)))
+
+
+def test_local_matmul_no_float_int_crossing():
+    """An int8 kernel on fp8 data would reinterpret values (equal byte
+    width, different kind) — the cast must refuse."""
+    a32, b32 = _mk(128, 128, 128, jnp.float32)
+    a, b = a32.astype(jnp.float8_e4m3fn), b32.astype(jnp.float8_e4m3fn)
+    kernel = InnerKernel(128, 128, 128, dtype="int8")
+    np.testing.assert_array_equal(np.asarray(local_matmul(a, b, kernel)),
+                                  np.asarray(_oracle(a, b)))
+
+
+def test_local_matmul_widening_cast():
+    """bf16 data on an fp32 kernel widens (always safe) before the dot."""
+    a32, b32 = _mk(64, 128, 64, jnp.float32)
+    a, b = a32.astype(jnp.bfloat16), b32.astype(jnp.bfloat16)
+    out = local_matmul(a, b, KER32)
+    want = _oracle(a.astype(jnp.float32), b.astype(jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_local_matmul_grad_parity():
+    """The custom_vjp's transposed fp32 matmuls agree with autodiff of the
+    oracle — routed training through the kernel path stays correct."""
+    a, b = _mk(96, 128, 80, jnp.float32)
+
+    def loss_kernel(x, y):
+        return (local_matmul(x, y, KER32) ** 2).sum()
+
+    def loss_oracle(x, y):
+        return (_oracle(x, y) ** 2).sum()
+
+    ga_k, gb_k = jax.grad(loss_kernel, argnums=(0, 1))(a, b)
+    ga_o, gb_o = jax.grad(loss_oracle, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(np.asarray(ga_k), np.asarray(ga_o),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gb_k), np.asarray(gb_o),
+                               rtol=1e-5, atol=1e-5)
+    assert ga_k.dtype == a.dtype and gb_k.dtype == b.dtype
+
+
+def test_inner_kernel_roundtrip_and_budget():
+    ik = InnerKernel(128, 128, 512, depth=1, dtype="bfloat16")
+    assert InnerKernel.from_dict(ik.to_dict()) == ik
+    assert ik.describe() == "128x128x512d1:bfloat16"
+    assert ik.working_set_bytes() <= _VMEM_BUDGET
+    big = InnerKernel(2048, 2048, 2048, dtype="float32")
+    assert big.working_set_bytes() > _VMEM_BUDGET
+
+
+# ---------------------------------------------------------------------------
+# pick_block_shape: the VMEM-budget / divisibility contract
+# ---------------------------------------------------------------------------
+
+def _check_block_contract(m, n, k, eb):
+    bm, bn, bk = pick_block_shape(m, n, k, eb)
+    kp = -(-k // 128) * 128
+    assert bm % 8 == 0 and bn % 128 == 0, (bm, bn)
+    # bk always divides the 128-padded K — tile_matmul's padding stays at
+    # the explicit 128 alignment, never silently bk-sized
+    assert 1 <= bk <= kp and kp % bk == 0, (bk, kp)
+    ws = (bm * bk + bk * bn) * eb * 2 + bm * bn * 4
+    assert ws <= _VMEM_BUDGET, (bm, bn, bk, ws)
+
+
+@pytest.mark.parametrize("m,n,k,eb", [
+    (1, 1, 1, 4), (8, 128, 127, 2), (100, 300, 129, 1),
+    (4096, 4096, 4096, 4), (128, 128, 1 << 20, 2), (7, 9, 999, 4),
+    (128, 128, 384, 1),  # kp not a power of two: bk must still divide it
+])
+def test_pick_block_shape_contract(m, n, k, eb):
+    _check_block_contract(m, n, k, eb)
 
 
 def test_pick_block_shape_alignment():
@@ -93,3 +219,36 @@ def test_flash_attention_ref_causal():
     assert out.shape == q.shape
     # first query position attends only to itself
     np.testing.assert_allclose(out[:, 0], v[:, 0], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis, requirements-dev.txt)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @given(m=st.integers(1, 300), k=st.integers(1, 300), n=st.integers(1, 300))
+    @settings(max_examples=12, deadline=None)
+    def test_tile_matmul_padding_property(m, k, n):
+        """tile_matmul must agree with the oracle for ANY shape (pads
+        internally)."""
+        a = jnp.asarray(RNG.standard_normal((m, k)), dtype=jnp.float32)
+        b = jnp.asarray(RNG.standard_normal((k, n)), dtype=jnp.float32)
+        out = tile_matmul(a, b, interpret=True, use_kernel=True)
+        np.testing.assert_allclose(out, a @ b, rtol=1e-3, atol=1e-3)
+
+    @given(m=st.integers(1, 8192), n=st.integers(1, 8192),
+           k=st.integers(1, 1 << 16), eb=st.sampled_from([1, 2, 4]))
+    @settings(max_examples=60, deadline=None)
+    def test_pick_block_shape_property(m, n, k, eb):
+        """For ANY problem shape and element width: MXU alignment, bk
+        divides the 128-padded K, and the double-buffered working set
+        stays under the VMEM budget."""
+        _check_block_contract(m, n, k, eb)
+
+else:  # keep the skip visible in local runs without hypothesis
+
+    @pytest.mark.skip(reason="property tests need hypothesis "
+                      "(requirements-dev.txt)")
+    def test_property_suite_needs_hypothesis():
+        pass

@@ -19,6 +19,7 @@ Two halves:
    Fig. 6c-tuned schedule reaches `outer_systolic` through the `pmm`
    routed-dispatch path.
 """
+import dataclasses
 import os
 import subprocess
 import sys
@@ -30,7 +31,8 @@ import pytest
 from repro.core import lower
 from repro.core.lower import (ExecPlan, Fallback, MeshView, lower_schedule,
                               lowering_summary)
-from repro.core.schedule import DATAFLOWS, GEMMShape, Schedule, Tiling
+from repro.core.schedule import (DATAFLOWS, INNER_VMEM_BUDGET, GEMMShape,
+                                 InnerKernel, Schedule, Tiling)
 
 
 def mesh2(dm, dn):
@@ -313,6 +315,47 @@ def test_describe_is_informative():
     text = ep.describe()
     assert "systolic" in text and "summa" in text
     assert lower.NON_SQUARE_SYSTOLIC in text
+
+
+# ---------------------------------------------------------------------------
+# two-level fields: InnerKernel / overlap through the lowering
+# ---------------------------------------------------------------------------
+
+def test_inner_kernel_and_overlap_carried_through():
+    ik = InnerKernel(64, 64, 32, dtype="float32")
+    s = dataclasses.replace(sched("summa"), inner_kernel=ik, overlap=True)
+    ep = lower_schedule(s, mesh2(2, 2))
+    assert ep.mode == "summa" and not ep.fallbacks
+    assert ep.inner_kernel == ik and ep.overlap is True
+    assert "ik=" in ep.describe() and "overlap" in ep.describe()
+    d = ep.to_dict()
+    assert d["inner_kernel"] == ik.to_dict() and d["overlap"] is True
+
+
+def test_oversized_inner_kernel_demotes_not_degrades():
+    """A kernel whose working set busts the VMEM budget drops to the
+    XLA-picked local GEMM with a recorded reason — mode unchanged (the
+    scatter_m_indivisible idiom)."""
+    big = InnerKernel(2048, 2048, 2048, dtype="float32")
+    assert big.working_set_bytes() > INNER_VMEM_BUDGET
+    ep = lower_schedule(dataclasses.replace(sched("summa"), inner_kernel=big),
+                        mesh2(2, 2))
+    assert ep.mode == "summa" and not ep.degraded
+    assert ep.inner_kernel is None
+    assert ep.reasons() == (lower.INNER_KERNEL_TOO_LARGE,)
+
+
+def test_auto_landing_sheds_inner_level():
+    """A degrade to auto drops kernel and overlap without an extra reason
+    — auto has no mode body to honor them, and the degrade itself is
+    already recorded."""
+    ik = InnerKernel(64, 64, 32, dtype="float32")
+    s = dataclasses.replace(sched("summa", k=130), inner_kernel=ik,
+                            overlap=True)
+    ep = lower_schedule(s, mesh2(2, 2))
+    assert ep.mode == "auto" and ep.degraded
+    assert ep.inner_kernel is None and ep.overlap is False
+    assert ep.reasons() == (lower.K_NOT_DIVISIBLE,)
 
 
 # ---------------------------------------------------------------------------

@@ -14,8 +14,11 @@ path, with asserted bounds), `analytic_bench` writes BENCH_analytic.json
 bounds) and `kernel_bench` writes BENCH_kernel.json (the inner-kernel
 schedule level: local_matmul vs jnp.dot, routed kernel-on/off, ring
 overlap on/off, tune-vs-analytic inner-pick agreement, with asserted
-bounds) — every BENCH_* artifact's schema, production command, and
-regression meaning is documented in docs/benchmarking.md."""
+bounds) and `serving_bench` writes BENCH_serving.json (SLO serving under
+replayed multi-tenant traffic: bucket-aware vs naive-FIFO admission
+goodput/p99/resolve-rate, with asserted bounds) — every BENCH_* artifact's
+schema, production command, and regression meaning is documented in
+docs/benchmarking.md."""
 from __future__ import annotations
 
 import sys
@@ -27,7 +30,8 @@ def main() -> None:
     from benchmarks import (analytic_bench, calibration_bench,
                             fig7_case_study, fig9_11_gh200,
                             fig12_portability, kernel_bench, microbench,
-                            plan_bench, routing_bench, tracing_bench)
+                            plan_bench, routing_bench, serving_bench,
+                            tracing_bench)
     modules = [
         ("fig7", fig7_case_study),
         ("fig9-11", fig9_11_gh200),
@@ -39,6 +43,7 @@ def main() -> None:
         ("tracing", tracing_bench),
         ("analytic", analytic_bench),
         ("kernel", kernel_bench),
+        ("serving", serving_bench),
     ]
     try:
         from benchmarks import roofline_table

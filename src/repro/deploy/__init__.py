@@ -7,6 +7,9 @@ batch planner, turning one-shot autotuning into a reusable serving pipeline.
     planner.batch_tune(model_workload(cfg, batch=8, seq=4096))   # cold, once
     plan = planner.plan(shape)                                   # warm: O(1)
 """
+from repro.deploy.batcher import (BATCH_MODES, Batch, BatchPolicy,
+                                  ContinuousBatcher, Request, bucket_pool,
+                                  decode_m)
 from repro.deploy.bucketing import (BucketingPolicy, adapt, bucket_of,
                                     distance, nearest_tuned, next_pow2,
                                     transfer_candidates)
@@ -19,10 +22,12 @@ from repro.deploy.planner import (Planner, arch_workload, model_workload,
                                   moe_dispatch_geometry, workload_coverage)
 
 __all__ = [
-    "BucketingPolicy", "CacheStats", "DeploymentPlan", "PLAN_SCHEMA_VERSION",
-    "PlanCache", "Planner", "SOURCE_BUCKETED", "SOURCE_TUNED", "adapt",
-    "arch_workload", "bucket_of", "distance", "hw_fingerprint",
-    "model_workload", "moe_dispatch_geometry", "nearest_tuned", "next_pow2",
-    "plan_from_tuning", "plan_key", "schedule_from_dict", "schedule_to_dict",
-    "search_variant", "transfer_candidates", "workload_coverage",
+    "BATCH_MODES", "Batch", "BatchPolicy", "BucketingPolicy", "CacheStats",
+    "ContinuousBatcher", "DeploymentPlan", "PLAN_SCHEMA_VERSION",
+    "PlanCache", "Planner", "Request", "SOURCE_BUCKETED", "SOURCE_TUNED",
+    "adapt", "arch_workload", "bucket_of", "bucket_pool", "decode_m",
+    "distance", "hw_fingerprint", "model_workload", "moe_dispatch_geometry",
+    "nearest_tuned", "next_pow2", "plan_from_tuning", "plan_key",
+    "schedule_from_dict", "schedule_to_dict", "search_variant",
+    "transfer_candidates", "workload_coverage",
 ]

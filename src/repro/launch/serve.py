@@ -24,13 +24,15 @@ import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.deploy import Planner, model_workload, workload_coverage
+from repro.deploy.batcher import BATCH_MODES, BatchPolicy
 from repro.deploy.warmup import add_plan_args, build_planner, warm_buckets
 from repro.launch.mesh import make_host_mesh
 from repro.models import shard_ctx
+from repro.models.matmul import pmm
 from repro.models.model import decode_init, decode_step, forward, init_params
 from repro.obs import (DriftMonitor, Tracer, build_run_report,
                        render_run_report, set_tracer, write_run_report)
-from repro.obs.trace import maybe_span
+from repro.obs.trace import CAT_STEP, maybe_span
 from repro.train.steps import make_serve_step
 
 
@@ -119,6 +121,83 @@ def report_routing(ctx: shard_ctx.GemmContext, cfg, batch: int,
         print(line)
 
 
+def run_traffic(args) -> None:
+    """`--traffic` mode: replay a seeded multi-tenant trace through the
+    continuous batcher against the warmed planner (docs/serving.md).
+
+    The virtual-clock loop in `launch/traffic.py` does the SLO accounting;
+    every distinct GEMM shape the replay admits is executed ONCE through
+    the real routed `pmm` path on the mesh (trace-time semantics — shapes
+    are static under jit, so one execution per shape is the honest unit of
+    dispatch work). The run report gains a `serving` section and the
+    tracer gains one marker per completed request.
+    """
+    from repro.launch.traffic import (TenantSpec, TrafficConfig,
+                                      generate_trace, serving_section,
+                                      simulate, warm_pool)
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    policy = BatchPolicy(mode=args.batch_mode)
+    tenants = tuple(
+        TenantSpec(name=f"tenant{i}", arch=cfg.name,
+                   rate_rps=args.traffic_rate,
+                   n_requests=args.traffic_requests,
+                   prompt_lens=(5, 9, 13, 17), gen_lens=(2, 3, 5))
+        for i in range(args.traffic_tenants))
+    tcfg = TrafficConfig(seed=args.traffic_seed, tenants=tenants)
+    cfgs = {t.name: cfg for t in tenants}
+
+    planner = build_planner(args.plan_cache, args.plan_grid,
+                            args.plan_candidates,
+                            online_tune=not args.no_online_tune)
+    warmed = warm_pool(planner, {cfg.name: cfg}, policy,
+                       tcfg.max_rows(policy))
+    print(f"traffic: warmed {len(warmed)} pool shape(s) "
+          f"[mode={policy.mode}]")
+    gemm_ctx = install_gemm_context(planner)
+    tracer = Tracer(process_name=f"serve.traffic.{cfg.name}")
+    set_tracer(tracer)
+
+    def dispatch(shape, phase):
+        # one real routed execution per distinct shape the replay admits
+        x = jnp.zeros((shape.m, shape.k), cfg.dtype)
+        w = jnp.zeros((shape.k, shape.n), cfg.dtype)
+        run = jax.jit(lambda a, b: pmm(a, b, tag=f"traffic.{phase}"))
+        np.asarray(run(x, w))
+
+    trace = generate_trace(tcfg)
+    t0 = time.time()
+    result = simulate(trace, planner, cfgs, policy=policy,
+                      precompiled=warmed, dispatch=dispatch)
+    wall = time.time() - t0
+    section = serving_section(result)
+    for rec in result.records:
+        tracer.instant("serve.request", cat=CAT_STEP, rid=rec.rid,
+                       tenant=rec.tenant,
+                       arrival_s=round(rec.arrival_s, 6),
+                       ttft_s=round(rec.ttft_s, 6),
+                       latency_s=round(rec.latency_s, 6), met=rec.met)
+    print(f"traffic replay: {len(trace)} requests / "
+          f"{len(tenants)} tenant(s), {section['batches']} batches, "
+          f"{section['distinct_shapes']} distinct GEMM shape(s) "
+          f"dispatched in {wall:.2f}s wall "
+          f"({section['makespan_s']:.3f}s virtual)")
+    report = build_run_report(
+        "serve", stats=gemm_ctx.stats.to_dict(), tracer=tracer,
+        extra={"arch": cfg.name, "serving": section,
+               "traffic": {"seed": tcfg.seed, "tenants": len(tenants),
+                           "requests": len(trace),
+                           "rate_rps": args.traffic_rate,
+                           "batch_mode": policy.mode}})
+    for line in render_run_report(report):
+        print(line)
+    if args.run_report:
+        write_run_report(args.run_report, report)
+        print(f"run report: {args.run_report}")
+    if args.trace:
+        tracer.write(args.trace)
+        print(f"chrome trace: {args.trace}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -137,6 +216,22 @@ def main():
     ap.add_argument("--refine-pending", type=int, default=0, metavar="N",
                     help="after serving, full-tune up to N bucket/analytic-"
                          "served shapes and upgrade their cache entries")
+    ap.add_argument("--traffic", action="store_true",
+                    help="replay a seeded multi-tenant traffic trace "
+                         "through the shape-bucket-aware continuous "
+                         "batcher instead of the fixed-batch loop "
+                         "(docs/serving.md)")
+    ap.add_argument("--traffic-requests", type=int, default=12,
+                    help="requests per tenant in the replayed trace")
+    ap.add_argument("--traffic-rate", type=float, default=100.0,
+                    help="per-tenant Poisson arrival rate (req/s)")
+    ap.add_argument("--traffic-seed", type=int, default=0,
+                    help="trace seed (same seed -> identical trace)")
+    ap.add_argument("--traffic-tenants", type=int, default=2,
+                    help="concurrent tenants sharing the mesh + plan cache")
+    ap.add_argument("--batch-mode", choices=BATCH_MODES, default="bucket",
+                    help="admission policy: bucket-aware (default) or the "
+                         "naive-FIFO baseline")
     ap.add_argument("--run-report", default="results/serve_run_report.json",
                     help="where to write the versioned run report "
                          "('' disables)")
@@ -144,6 +239,10 @@ def main():
                     help="write a Perfetto-loadable Chrome trace here")
     add_plan_args(ap)
     args = ap.parse_args()
+
+    if args.traffic:
+        run_traffic(args)
+        return
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params = init_params(jax.random.PRNGKey(0), cfg)

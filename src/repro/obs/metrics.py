@@ -8,8 +8,9 @@ report embeds. Deliberately tiny and deterministic:
 - histograms keep running count/sum/min/max plus the FIRST `max_samples`
   observations (a deterministic cap, not a random reservoir — two runs of
   the same program produce identical snapshots), from which the snapshot
-  derives percentiles. Observations past the cap still update the running
-  stats, so count/mean/min/max stay exact.
+  derives percentiles (p50/p95/p99 — p99 is what the serving harness's SLO
+  accounting hangs its tail-latency bounds on). Observations past the cap
+  still update the running stats, so count/mean/min/max stay exact.
 
 Everything is wall-clock-agnostic: callers pass the values; the registry
 never reads a clock itself.
@@ -62,11 +63,12 @@ class Histogram:
     def to_dict(self) -> Dict[str, float]:
         if not self.count:
             return {"count": 0, "sum": 0.0, "mean": 0.0, "min": 0.0,
-                    "max": 0.0, "p50": 0.0, "p95": 0.0}
+                    "max": 0.0, "p50": 0.0, "p95": 0.0, "p99": 0.0}
         return {"count": self.count, "sum": self.total,
                 "mean": self.total / self.count,
                 "min": self.min, "max": self.max,
-                "p50": self.percentile(0.5), "p95": self.percentile(0.95)}
+                "p50": self.percentile(0.5), "p95": self.percentile(0.95),
+                "p99": self.percentile(0.99)}
 
 
 class MetricsRegistry:

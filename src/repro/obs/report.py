@@ -20,6 +20,9 @@ Schema (see docs/observability.md for the field-by-field reference):
       "dispatches":  per-pmm-span provenance     (optional, from the
                                                   tracer),
       "metrics":     MetricsRegistry.to_dict()   (optional),
+      "serving":     SLO/goodput section         (optional, written by
+                                                  `serve --traffic`; see
+                                                  docs/serving.md),
       ...extra launcher-specific keys
     }
 """
@@ -128,6 +131,15 @@ def render_run_report(report: Dict[str, Any]) -> List[str]:
             f"{workload['covered']:.0%} of the {workload['observed']} "
             f"executed GEMM shapes ({len(workload['extra'])} unpredicted, "
             f"{len(workload['missing'])} predicted-but-unexecuted)")
+    serving = report.get("serving")
+    if serving is not None:
+        lines.append(
+            f"serving [{serving['policy']}]: {serving['requests']} requests "
+            f"goodput={serving['goodput_tps']:.1f} tok/s "
+            f"p50={serving['p50_latency_s'] * 1e3:.1f}ms "
+            f"p99={serving['p99_latency_s'] * 1e3:.1f}ms "
+            f"miss={serving['deadline_miss_rate']:.0%} "
+            f"cold-shapes={serving['cold_shapes']}")
     drift = report.get("drift")
     if drift is not None and drift.get("n_samples"):
         per_mode = {m: rec["geomean_ratio"]

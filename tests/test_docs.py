@@ -78,6 +78,7 @@ def test_calibrate_flag_exists_and_is_documented():
     "## BENCH_tracing.json",
     "## BENCH_analytic.json",
     "## BENCH_kernel.json",
+    "## BENCH_serving.json",
 ])
 def test_bench_artifact_sections_present(section):
     """CI's assertions reference these artifacts by name; the schema doc
@@ -185,6 +186,48 @@ def test_analytic_schema_fields_documented(field):
 def test_kernel_schema_fields_documented(field):
     assert field in _read(BENCHMARKING_MD), (
         f"BENCH_kernel.json field {field!r} is asserted by CI but "
+        f"missing from docs/benchmarking.md")
+
+
+# -- serving surface: CLI flags + serving-section schema stay documented --
+
+SERVING_MD = os.path.join(ROOT, "docs", "serving.md")
+
+
+def test_traffic_flag_exists_and_is_documented():
+    """`--traffic` must exist in serve's CLI and be documented where the
+    serving doc sends readers — the harness entry point cannot silently
+    rename."""
+    assert '"--traffic"' in _read(SERVE_PY), (
+        "serve lost its --traffic flag; update docs + CI if renamed")
+    text = _read(SERVING_MD)
+    for needle in ("--traffic", "--traffic-seed", "--batch-mode",
+                   "serving_bench.py"):
+        assert needle in text, (
+            f"docs/serving.md no longer documents {needle}")
+
+
+@pytest.mark.parametrize("field", [
+    # the serving-section keys CI asserts on / the launchers render from
+    "goodput_tps", "throughput_tps", "deadline_miss_rate",
+    "p50_latency_s", "p99_latency_s", "p50_ttft_s", "p99_ttft_s",
+    "cold_shapes", "distinct_shapes", "mean_batch_utilization",
+    "resolve_rate", "per_phase", "makespan_s",
+])
+def test_serving_schema_fields_documented(field):
+    assert field in _read(SERVING_MD), (
+        f"serving-section field {field!r} is part of the serving contract "
+        f"but missing from docs/serving.md")
+
+
+@pytest.mark.parametrize("field", [
+    # the BENCH_serving.json keys CI asserts on
+    "goodput_floor", "p99_bound_s", "resolve_floor", "bucket_cold_shapes",
+    "bucket_vs_fifo_goodput", "within_bounds", "warmed_pool",
+])
+def test_serving_bench_schema_fields_documented(field):
+    assert field in _read(BENCHMARKING_MD), (
+        f"BENCH_serving.json field {field!r} is asserted by CI but "
         f"missing from docs/benchmarking.md")
 
 

@@ -111,8 +111,14 @@ def test_metrics_snapshot():
     h = snap["histograms"]["pmm.dispatch_us.mode.summa"]
     assert h["count"] == 4 and h["sum"] == 10.0
     assert h["min"] == 1.0 and h["max"] == 4.0 and h["mean"] == 2.5
-    assert h["p50"] <= h["p95"] <= h["max"]
+    assert h["p50"] <= h["p95"] <= h["p99"] <= h["max"]
     json.dumps(snap)
+    # the zero-observation snapshot carries the full percentile schema too
+    # (the serving section's SLO accounting indexes p99 unconditionally)
+    empty = MetricsRegistry().histogram("never.observed").to_dict()
+    assert empty["count"] == 0
+    assert {"p50", "p95", "p99"} <= set(empty)
+    assert empty["p99"] == 0.0
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,234 @@
+"""Fused-attention benchmark -> BENCH_attention.json.
+
+The gate for the FlatAttention dataflow (core/attention.py +
+models.matmul.pattn): on a 4x4 fake-device mesh,
+
+- **planner resolution**: every bench shape (GQA/MQA prefill, long-KV
+  decode, MLA-absorbed decode geometry) must resolve through
+  `Planner.plan_cached` to a fused `AttnSchedule` — resolve rate 1.0 —
+  and `lower_attention` must come back CLEAN (a flat_* mode, no degrades);
+  a shape that silently fell to `unfused_attn` would quietly benchmark
+  the reference path against itself, so the harness raises instead.
+- **fused_vs_unfused geomean** (the headline CI asserts >= 1.0): the cost
+  model's prediction for the planner-picked fused schedule
+  (`sim.perf.estimate_attention` — KV streamed through L1, one combine /
+  ring superstep sequence over the mesh) against the same machine's
+  unfused price, where the (Sq, Skv) score matrix round-trips HBM between
+  QK^T, softmax, and PV and nothing shards over the mesh. Deterministic
+  pure arithmetic — this is the deployment claim the dataflow exists for.
+- **measured wall time**: fused `flat_attention` vs the unfused reference
+  (`_sdpa`) on the fake mesh, best-of-reps. On fake CPU devices (one
+  host core) this measures collective/trace overhead, not fabric
+  parallelism — same caveat as BENCH_routing's efficiency_vs_auto — so
+  the ratios are reported and asserted > 0, not >= 1.
+
+Standalone (sets its own fake-device count; run before importing jax
+elsewhere):
+
+  PYTHONPATH=src python benchmarks/attention_bench.py --reps 1
+
+Also exposed to benchmarks/run.py via a subprocess `run()` so the device
+count does not leak into the other benchmarks' jax runtime.
+"""
+import argparse
+import json
+import os
+import time
+from typing import List
+
+GEOMEAN_FLOOR = 1.0     # predicted fused-vs-unfused, geomean over shapes
+
+# (label, b, sq, skv, h, hkv, d, dv) — prefill + decode geometries; every
+# skv divides the 4-row mesh axis so the fused lowering is clean
+SHAPES = [
+    ("prefill_mha", 1, 1024, 1024, 8, 8, 64, 64),
+    ("prefill_gqa", 2, 512, 512, 8, 2, 64, 64),
+    ("prefill_mqa", 2, 512, 512, 8, 1, 64, 64),
+    ("decode_gqa", 8, 1, 4096, 8, 1, 64, 64),
+    ("decode_mla_absorbed", 4, 1, 2048, 16, 1, 40, 32),
+]
+# smaller mirror set for the measured section (1 host core)
+MEASURED = [
+    ("prefill_gqa", 2, 256, 256, 8, 2, 64, 64),
+    ("decode_gqa", 8, 1, 512, 8, 1, 64, 64),
+]
+
+
+def _unfused_predict(shape, hw, elem_bytes: int = 4) -> float:
+    """Unfused attention on the same machine: QK^T and PV run at full Skv
+    on ONE tile grid's engine (nothing shards over the mesh — the legacy
+    path replicates), and the fp32 score matrix round-trips HBM four
+    times (write logits, read for softmax, write probs, read for PV)."""
+    from repro.sim.perf import _attn_gemm_time
+    cycles = (_attn_gemm_time(shape.sq, shape.skv, shape.d, hw)
+              + _attn_gemm_time(shape.sq, shape.dv, shape.skv, hw)
+              + 4 * shape.sq * shape.skv)
+    engine = shape.b * shape.h * cycles / hw.tile.clock_hz
+    qkv_bytes = shape.b * elem_bytes * (
+        shape.h * shape.sq * (shape.d + shape.dv)
+        + shape.hkv * shape.skv * (shape.d + shape.dv))
+    score_bytes = 4 * shape.b * shape.h * shape.sq * shape.skv * 4
+    return max(engine, (qkv_bytes + score_bytes) / hw.hbm.total_bw)
+
+
+def _bench_predicted() -> dict:
+    from repro.core.lower import lower_attention
+    from repro.core.schedule import AttnShape
+    from repro.deploy import Planner
+    from repro.hw.config import tpu_pod_as_accelerator
+
+    hw = tpu_pod_as_accelerator((4, 4))
+    planner = Planner(hw, elem_bytes=4)
+
+    class _Mesh:             # lowering only reads .shape[axis]
+        shape = {"data": 4, "model": 4}
+
+    shapes = {}
+    ratios = []
+    for (label, b, sq, skv, h, hkv, d, dv) in SHAPES:
+        shape = AttnShape(b=b, sq=sq, skv=skv, h=h, hkv=hkv, d=d, dv=dv)
+        t0 = time.perf_counter()
+        plan = planner.plan_cached(shape)
+        resolve_us = (time.perf_counter() - t0) * 1e6
+        if plan is None:
+            raise RuntimeError(f"{label}: {shape.describe()} did not "
+                               f"resolve to a fused plan")
+        ep = lower_attention(plan.schedule, _Mesh(), "data", "model")
+        if not ep.mode.startswith("flat_") or ep.degraded:
+            raise RuntimeError(f"{label} lowered to {ep.describe()}, "
+                               f"expected a clean flat_* mode")
+        fused_s = plan.report.total_time
+        unfused_s = _unfused_predict(shape, hw)
+        ratio = unfused_s / fused_s
+        ratios.append(ratio)
+        shapes[label] = {
+            "shape": shape.describe(),
+            "schedule": plan.schedule.describe(),
+            "mode": ep.mode,
+            "plan_resolve_us": round(resolve_us, 1),
+            "fused_predicted_s": fused_s,
+            "unfused_predicted_s": unfused_s,
+            "fused_vs_unfused": round(ratio, 3),
+        }
+    import math
+    geomean = math.exp(sum(math.log(r) for r in ratios) / len(ratios))
+    return {"hw": hw.name, "grid": [4, 4], "shapes": shapes,
+            "fused_vs_unfused_geomean": round(geomean, 3)}
+
+
+def _bench_measured(reps: int) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.attention import flat_attention
+    from repro.core.lower import lower_attention
+    from repro.core.schedule import AttnSchedule, AttnShape
+    from repro.models.attention import _sdpa
+
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    rng = np.random.default_rng(0)
+
+    def best_of(fn, q, k, v):
+        jax.block_until_ready(fn(q, k, v))       # compile + warm
+        best = float("inf")
+        for _ in range(max(1, reps)):
+            t0 = time.perf_counter()
+            for _ in range(3):
+                out = fn(q, k, v)
+            jax.block_until_ready(out)
+            best = min(best, (time.perf_counter() - t0) / 3)
+        return best
+
+    out = {}
+    for (label, b, sq, skv, h, hkv, d, dv) in MEASURED:
+        shape = AttnShape(b=b, sq=sq, skv=skv, h=h, hkv=hkv, d=d, dv=dv)
+        sched = AttnSchedule(shape=shape, composition="merge", kv_chunk=64)
+        ep = lower_attention(sched, mesh, "data", "model")
+        if not ep.mode.startswith("flat_") or ep.degraded:
+            raise RuntimeError(f"{label} lowered to {ep.describe()}, "
+                               f"expected a clean flat_* mode")
+        q = jnp.asarray(rng.standard_normal((b, sq, h, d)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, skv, hkv, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, skv, hkv, dv)), jnp.float32)
+        t_unfused = best_of(
+            jax.jit(lambda q, k, v: _sdpa(q, k, v, causal=True)), q, k, v)
+        t_fused = best_of(
+            jax.jit(lambda q, k, v, e=ep: flat_attention(
+                q, k, v, mesh, e, causal=True)), q, k, v)
+        out[label] = {
+            "mode": ep.mode,
+            "unfused_ms": round(t_unfused * 1e3, 3),
+            "fused_ms": round(t_fused * 1e3, 3),
+            "fused_vs_unfused": round(t_unfused / t_fused, 3),
+        }
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reps", type=int, default=3,
+                    help="execution repetitions per shape (best-of)")
+    ap.add_argument("--skip-measured", action="store_true",
+                    help="skip the fake-mesh wall-time section (keep only "
+                         "the deterministic cost-model comparison)")
+    ap.add_argument("--out", default="BENCH_attention.json")
+    args = ap.parse_args(argv)
+
+    # must precede the first jax import (the lazy in-function imports);
+    # set here, not at module top, so merely importing this module cannot
+    # leak fake devices into the host process
+    if "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=16").strip()
+
+    result = _bench_predicted()
+    if not args.skip_measured:
+        result["measured"] = _bench_measured(args.reps)
+    result["bounds"] = {"geomean_floor": GEOMEAN_FLOOR}
+    ok = result["fused_vs_unfused_geomean"] >= GEOMEAN_FLOOR
+    for rec in result.get("measured", {}).values():
+        ok = ok and rec["fused_vs_unfused"] > 0
+    result["within_bounds"] = bool(ok)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+
+    for label, rec in sorted(result["shapes"].items()):
+        print(f"attention.predicted.{label},{rec['fused_predicted_s']*1e6:.1f},"
+              f"vs_unfused={rec['fused_vs_unfused']} mode={rec['mode']}")
+    for label, rec in sorted(result.get("measured", {}).items()):
+        print(f"attention.exec.{label},{rec['fused_ms']*1e3:.1f},"
+              f"vs_unfused={rec['fused_vs_unfused']}")
+    print(f"attention.geomean,{result['fused_vs_unfused_geomean']},"
+          f"within_bounds={result['within_bounds']}")
+    print(f"wrote {args.out}")
+    if not result["within_bounds"]:
+        raise SystemExit(
+            f"BENCH_attention out of bounds: geomean "
+            f"{result['fused_vs_unfused_geomean']} < {GEOMEAN_FLOOR}")
+    return result
+
+
+def run() -> List[str]:
+    """benchmarks/run.py hook: subprocess so the fake-device XLA flag never
+    leaks into the shared jax runtime of the other benchmarks."""
+    import subprocess
+    import sys
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--reps", "1",
+         "--out", os.devnull],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ, "PYTHONPATH":
+             os.pathsep.join(filter(None, [
+                 os.path.join(os.path.dirname(__file__), "..", "src"),
+                 os.environ.get("PYTHONPATH", "")]))})
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-500:])
+    return [l for l in proc.stdout.splitlines()
+            if l.startswith("attention.")]
+
+
+if __name__ == "__main__":
+    main()

@@ -16,9 +16,12 @@ schedule level: local_matmul vs jnp.dot, routed kernel-on/off, ring
 overlap on/off, tune-vs-analytic inner-pick agreement, with asserted
 bounds) and `serving_bench` writes BENCH_serving.json (SLO serving under
 replayed multi-tenant traffic: bucket-aware vs naive-FIFO admission
-goodput/p99/resolve-rate, with asserted bounds) — every BENCH_* artifact's
-schema, production command, and regression meaning is documented in
-docs/benchmarking.md."""
+goodput/p99/resolve-rate, with asserted bounds) and `attention_bench`
+writes BENCH_attention.json (the FlatAttention fused dataflow: planner
+resolution + clean lowering per shape, predicted fused-vs-unfused
+geomean, fake-mesh wall time, with asserted bounds) — every BENCH_*
+artifact's schema, production command, and regression meaning is
+documented in docs/benchmarking.md."""
 from __future__ import annotations
 
 import sys
@@ -27,11 +30,11 @@ import traceback
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import (analytic_bench, calibration_bench,
-                            fig7_case_study, fig9_11_gh200,
-                            fig12_portability, kernel_bench, microbench,
-                            plan_bench, routing_bench, serving_bench,
-                            tracing_bench)
+    from benchmarks import (analytic_bench, attention_bench,
+                            calibration_bench, fig7_case_study,
+                            fig9_11_gh200, fig12_portability, kernel_bench,
+                            microbench, plan_bench, routing_bench,
+                            serving_bench, tracing_bench)
     modules = [
         ("fig7", fig7_case_study),
         ("fig9-11", fig9_11_gh200),
@@ -44,6 +47,7 @@ def main() -> None:
         ("analytic", analytic_bench),
         ("kernel", kernel_bench),
         ("serving", serving_bench),
+        ("attention", attention_bench),
     ]
     try:
         from benchmarks import roofline_table

@@ -1,0 +1,256 @@
+"""Fused attention dataflow (FlatAttention): QKᵀ → online softmax → PV as
+one tiled superstep sequence with per-composition collectives.
+
+The unfused path runs attention as three independently-routed projection
+GEMMs plus a stock softmax — the score matrix round-trips through memory
+and the planner never sees the composition. FlatAttention (PAPERS.md) shows
+MHA on tile-based many-PE accelerators wants its *own* dataflow: stream KV
+tiles through L1, keep the online-softmax running stats (m, l) and the
+output accumulator resident, and choose the collective per composition:
+
+- **merge** — KV is sharded over the mesh's row axis; every device scans
+  its local KV shard with the online-softmax recurrence, then one combine
+  superstep reduces the partials across the row:
+  ``m_g = pmax(m)``, ``l_g = psum(exp(m - m_g) * l)``,
+  ``o_g = psum(exp(m - m_g) * acc)``, ``out = o_g / l_g``.
+- **ring** — Q is additionally sharded over the row axis (sq blocks); the
+  KV shards rotate around a `ppermute` ring so each device sees the full
+  KV stream in dm supersteps, carrying (m, l, acc) through the scan.
+
+Head sharding over the column axis is a lowering legality question
+(`lower_attention`), not a tunable: query heads must divide the axis and
+KV heads must divide too or be fully replicable (MQA / MLA-absorbed).
+
+Layering mirrors `core/lower.py`: the planning half (`attn_candidates`,
+`attn_tune`) is importable without jax — the deploy layer prices attention
+schedules with `sim.perf.estimate_attention` under the same calibrated
+`CalibrationProfile` as GEMMs. Only `flat_attention` (the shard_map
+executor `models.matmul.pattn` dispatches to) imports jax, lazily.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from repro.core.autotuner import TunedResult
+from repro.core.schedule import (ATTN_COMPOSITIONS, AttnSchedule, AttnShape,
+                                 default_elem_dtype)
+from repro.hw.config import AcceleratorConfig
+from repro.sim.calibrate import is_trusted, ranking_cost
+from repro.sim.perf import estimate_attention
+
+NEG_INF = -1e30
+
+# KV-chunk menu, largest first (larger chunks amortize softmax passes and
+# barriers; smaller ones fit the L1 working set) — same shape as the
+# analytic shortlist's _TK_MENU.
+_KV_CHUNK_MENU = (512, 256, 128, 64)
+
+
+def _head_shard(shape: AttnShape, dn: int) -> bool:
+    return (dn > 1 and shape.h % dn == 0
+            and (shape.hkv % dn == 0 or shape.hkv == 1))
+
+
+def attn_candidates(shape: AttnShape, hw: AcceleratorConfig,
+                    elem_bytes: int = 4) -> Tuple[AttnSchedule, ...]:
+    """Closed-form fused-attention candidates for `shape` on `hw`.
+
+    The space is composition × kv_chunk — tiny, so the planner prices it
+    inline (no bucketing, no background refinement). Only legal candidates
+    are emitted: skv must shard over the row axis, ring additionally needs
+    sq to (decode's sq=1 gets merge only), and the per-(batch, head) L1
+    working set must fit the tile.
+    """
+    dm, dn = hw.grid
+    if dm > 0 and shape.skv % dm:
+        return ()
+    kv_l = max(1, shape.skv // max(1, dm))
+    head_shard = _head_shard(shape, dn)
+    dtype = default_elem_dtype(elem_bytes, hw)
+    comps = ["merge"]
+    if dm > 1 and shape.sq % dm == 0:
+        comps.append("ring")
+    out, seen = [], set()
+    for comp in comps:
+        sq_l = shape.sq // dm if comp == "ring" else shape.sq
+        for target in _KV_CHUNK_MENU:
+            chunk = min(target, kv_l)
+            if (comp, chunk) in seen:
+                continue
+            # working set per (batch, head): resident Q block + streamed
+            # KV chunk + fp32 logits + fp32 (m, l, acc)
+            ws = ((sq_l * shape.d + chunk * (shape.d + shape.dv)) * elem_bytes
+                  + sq_l * chunk * 4 + sq_l * (2 + shape.dv) * 4)
+            if ws > hw.tile.l1_bytes:
+                continue
+            seen.add((comp, chunk))
+            out.append(AttnSchedule(shape=shape, composition=comp,
+                                    kv_chunk=chunk, elem_bytes=elem_bytes,
+                                    elem_dtype=dtype))
+    return tuple(out)
+
+
+def attn_tune(shape: AttnShape, hw: AcceleratorConfig, elem_bytes: int = 4,
+              calibration=None) -> TunedResult:
+    """Pick the best fused-attention schedule for `shape` on `hw`.
+
+    Prices every candidate with `estimate_attention` and ranks by the same
+    `ranking_cost` as the GEMM tuners: the calibrated prediction under a
+    trusted `CalibrationProfile`, else the analytical prior. Raises
+    `RuntimeError` when no fused candidate is legal (the planner treats
+    that as an unresolvable shape, exactly like `analytic_tune`).
+    """
+    cands = attn_candidates(shape, hw, elem_bytes=elem_bytes)
+    if not cands:
+        raise RuntimeError(f"no legal flat-attention candidate for "
+                           f"{shape.describe()} on {hw.name}")
+    cost_fn = ranking_cost(calibration)
+    best = None
+    log = []
+    for cand in cands:
+        # cost_fn applies the trusted profile itself (profile.predict over
+        # the analytical report) — same contract as price_candidates: the
+        # stored report stays analytical, ranking provenance in `calibration`
+        report = estimate_attention(cand, hw)
+        cost = cost_fn(report)
+        log.append((cand.describe(), cost, report.utilization(hw)))
+        if best is None or cost < best[0]:
+            best = (cost, cand, report)
+    _, sched, report = best
+    return TunedResult(schedule=sched, report=report,
+                       candidates_tried=len(cands), log=log,
+                       calibration=(calibration.digest()
+                                    if is_trusted(calibration) else ""))
+
+
+# -- execution ----------------------------------------------------------------
+
+def flat_attention(q, k, v, mesh, exec_plan, *, causal: bool = True,
+                   scale: Optional[float] = None, q_positions=None,
+                   kv_len=None):
+    """Execute fused attention on `mesh` under a lowered `ExecPlan`.
+
+    q: (b, sq, h, d); k: (b, skv, hkv, d); v: (b, skv, hkv, dv) →
+    (b, sq, h, dv). GQA grouping (h a multiple of hkv) is handled by
+    reshaping q to (…, hkv, g, d); `q_positions` (sq,) and `kv_len` (b,)
+    carry decode's absolute positions and valid-cache lengths, with the
+    same mask semantics as `models.attention._sdpa`.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    row = exec_plan.axes["row"]
+    col = exec_plan.axes["col"]
+    comp = exec_plan.kwargs.get("composition", "merge")
+    head_shard = bool(exec_plan.kwargs.get("head_shard", False))
+    dm = int(mesh.shape[row])
+    dn = int(mesh.shape[col])
+
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    if scale is None:
+        scale = d ** -0.5
+    h_l = h // dn if head_shard else h
+    hkv_shard = head_shard and hkv % dn == 0 and hkv > 1
+    hkv_l = hkv // dn if hkv_shard else hkv
+    g = h_l // hkv_l
+    kv_l = skv // dm
+    ring = comp == "ring" and dm > 1
+    sq_l = sq // dm if ring else sq
+
+    qpos = jnp.asarray(q_positions if q_positions is not None
+                       else jnp.arange(sq), jnp.int32)
+    klen = jnp.asarray(kv_len if kv_len is not None
+                       else jnp.full((b,), skv), jnp.int32)
+
+    hq_spec = col if head_shard else None
+    hkv_spec = col if hkv_shard else None
+
+    def _masked(logits, kpos, qp, kl):
+        # logits: (b, hkv_l, g, sq_l, ck) with kpos (ck,) global positions
+        if causal:
+            mask = kpos[None, :] <= qp[:, None]
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        valid = kpos[None, :] < kl[:, None]
+        return jnp.where(valid[:, None, None, None], logits, NEG_INF)
+
+    def _scores(qg, k_c):
+        return jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                          k_c.astype(jnp.float32),
+                          preferred_element_type=jnp.float32) * scale
+
+    if not ring:
+        def body(q_l, k_l, v_l, qp, kl):
+            ri = jax.lax.axis_index(row)
+            kpos = ri * kv_l + jnp.arange(kv_l)
+            qg = q_l.reshape(b, sq, hkv_l, g, d).astype(jnp.float32)
+            logits = _masked(_scores(qg, k_l), kpos, qp, kl)
+            m_loc = logits.max(axis=-1)
+            m_g = jax.lax.pmax(jax.lax.stop_gradient(m_loc), row)
+            p = jnp.exp(logits - m_g[..., None])
+            l_g = jax.lax.psum(p.sum(axis=-1), row)
+            # normalize BEFORE PV (l_g is already global, so this is legal
+            # at any dm) and multiply at the value dtype — the same
+            # normalize-then-cast rounding as _sdpa's softmax, so routed
+            # and unfused numerics agree to dtype precision
+            probs = p / jnp.maximum(l_g, 1e-30)[..., None]
+            out = jax.lax.psum(
+                jnp.einsum("bhgqk,bkhd->bhgqd", probs.astype(v_l.dtype),
+                           v_l, preferred_element_type=jnp.float32), row)
+            return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h_l, dv)
+
+        out = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(None, None, hq_spec, None),
+                      P(None, row, hkv_spec, None),
+                      P(None, row, hkv_spec, None), P(), P()),
+            out_specs=P(None, None, hq_spec, None),
+            check_rep=False)(q, k, v, qpos, klen)
+        return out.astype(q.dtype)
+
+    perm = [(j, (j + 1) % dm) for j in range(dm)]
+
+    def ring_body(q_l, k_l, v_l, qp_l, kl):
+        ri = jax.lax.axis_index(row)
+        qg = q_l.reshape(b, sq_l, hkv_l, g, d).astype(jnp.float32)
+
+        def step(carry, t):
+            m_run, l_run, acc, k_c, v_c = carry
+            # at step t this device holds the shard ring-shifted from
+            # source (ri - t) mod dm, whose global KV offset anchors masks
+            src = (ri - t) % dm
+            kpos = src * kv_l + jnp.arange(kv_l)
+            logits = _masked(_scores(qg, k_c), kpos, qp_l, kl)
+            m_new = jnp.maximum(
+                m_run, jax.lax.stop_gradient(logits.max(axis=-1)))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(v_c.dtype), v_c,
+                preferred_element_type=jnp.float32)
+            k_c = jax.lax.ppermute(k_c, row, perm)
+            v_c = jax.lax.ppermute(v_c, row, perm)
+            return (m_new, l_new, acc_new, k_c, v_c), None
+
+        m0 = jnp.full((b, hkv_l, g, sq_l), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv_l, g, sq_l), jnp.float32)
+        a0 = jnp.zeros((b, hkv_l, g, sq_l, dv), jnp.float32)
+        # K/V ride the ring at the operand dtype (the scores einsum
+        # upcasts K per step; PV matches _sdpa's probs-cast rounding)
+        carry = (m0, l0, a0, k_l, v_l)
+        (m, l, acc, _, _), _ = jax.lax.scan(step, carry, jnp.arange(dm))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, sq_l, h_l, dv)
+
+    out = shard_map(
+        ring_body, mesh=mesh,
+        in_specs=(P(None, row, hq_spec, None),
+                  P(None, row, hkv_spec, None),
+                  P(None, row, hkv_spec, None), P(row), P()),
+        out_specs=P(None, row, hq_spec, None),
+        check_rep=False)(q, k, v, qpos, klen)
+    return out.astype(q.dtype)

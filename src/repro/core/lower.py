@@ -66,16 +66,27 @@ K_NOT_DIVISIBLE = "k_not_divisible"           # -> auto
 # kwarg demotion (mode unchanged)
 SCATTER_M_INDIVISIBLE = "scatter_m_indivisible"  # psum_scatter -> psum
 INNER_KERNEL_TOO_LARGE = "inner_kernel_too_large"  # ik working set > VMEM -> XLA inner
+# fused-attention lowering (lower_attention)
+ATTN_SEQ_NOT_DIVISIBLE = "attn_seq_not_divisible"    # ring needs sq % dm -> flat_merge
+ATTN_KV_NOT_DIVISIBLE = "attn_kv_not_divisible"      # skv % dm -> unfused_attn
+ATTN_HEADS_REPLICATED = "attn_heads_replicated"      # h/hkv vs dn -> replicate heads (kwarg demotion)
+ATTN_UNKNOWN_COMPOSITION = "attn_unknown_composition"  # unrecognized -> flat_merge
 
 REASONS = (NON_SQUARE_SYSTOLIC, NON_SQUARE_INNER, INNER_GRID_MISMATCH,
            NON_SQUARE_OUTER, OUTER_RING_TOO_SMALL, GRID_MISMATCH, GK_IS_ONE,
            UNKNOWN_DATAFLOW, M_NOT_DIVISIBLE, N_NOT_DIVISIBLE,
-           K_NOT_DIVISIBLE, SCATTER_M_INDIVISIBLE, INNER_KERNEL_TOO_LARGE)
+           K_NOT_DIVISIBLE, SCATTER_M_INDIVISIBLE, INNER_KERNEL_TOO_LARGE,
+           ATTN_SEQ_NOT_DIVISIBLE, ATTN_KV_NOT_DIVISIBLE,
+           ATTN_HEADS_REPLICATED, ATTN_UNKNOWN_COMPOSITION)
 
 # modes an ExecPlan can resolve to (superset of gemm.MODES: the 3-D split-K
-# and both hierarchical modes need a mesh view, so they are plan-only)
+# and both hierarchical modes need a mesh view, so they are plan-only).
+# flat_merge/flat_ring are the fused-attention compositions; unfused_attn is
+# attention's explicit degrade target — the legacy projections+chunked_sdpa
+# path, always reached WITH a recorded reason (never the silent `auto`).
 EXEC_MODES = ("auto", "summa", "cannon", "splitk", "splitk_summa",
-              "hierarchical", "outer_systolic", "allgather")
+              "hierarchical", "outer_systolic", "allgather",
+              "flat_merge", "flat_ring", "unfused_attn")
 
 # sub-axis names introduced by mesh views
 K_AXIS = "splitk"
@@ -384,6 +395,72 @@ def lower_schedule(schedule, mesh, row_axis: str = "data",
     return ExecPlan(mode=mode, axes=axes, kwargs=kwargs, view=view,
                     requested=df, grid=grid, shape=(m, n, k),
                     fallbacks=tuple(fallbacks), inner_kernel=ik, overlap=ov)
+
+
+def lower_attention(schedule, mesh, row_axis: str = "data",
+                    col_axis: str = "model", shape=None) -> ExecPlan:
+    """Resolve an `AttnSchedule` into an `ExecPlan` for `mesh`.
+
+    Mirrors `lower_schedule`'s contract: duck-typed schedule, namespace
+    mesh (only `.shape[axis]` needed), legality checked against the ACTUAL
+    problem shape, every degradation recorded. The chain is
+
+        flat_ring --attn_seq_not_divisible--> flat_merge
+                  --attn_kv_not_divisible--> unfused_attn
+
+    plus the kwarg demotion `attn_heads_replicated` (heads replicate over
+    the column axis instead of sharding; the mode stays fused). The degrade
+    target is the explicit `unfused_attn` mode — the legacy
+    projections+chunked_sdpa path — never the silent `auto`.
+    """
+    shp = shape if shape is not None else getattr(schedule, "shape", None)
+    if shp is None:
+        raise ValueError("lower_attention needs a problem shape: pass "
+                         "shape= or a schedule with a .shape")
+    dm, dn = int(mesh.shape[row_axis]), int(mesh.shape[col_axis])
+    fallbacks: List[Fallback] = []
+
+    def fall(reason: str, from_mode: str, to_mode: str) -> None:
+        fallbacks.append(Fallback(reason, from_mode, to_mode))
+
+    comp = getattr(schedule, "composition", "merge")
+    if comp not in ("merge", "ring"):
+        fall(ATTN_UNKNOWN_COMPOSITION, f"flat_{comp}", "flat_merge")
+        comp = "merge"
+    mode = "flat_ring" if comp == "ring" else "flat_merge"
+
+    # ring additionally shards Q over the row axis (sq blocks rotate
+    # against the KV ring); an indivisible sq — decode's sq=1 on any
+    # dm > 1 mesh — demotes to the merge composition, not to unfused
+    if mode == "flat_ring" and (dm > 1 and shp.sq % dm):
+        fall(ATTN_SEQ_NOT_DIVISIBLE, "flat_ring", "flat_merge")
+        mode, comp = "flat_merge", "merge"
+
+    axes: Dict[str, str] = {"row": row_axis, "col": col_axis}
+    kwargs: Dict[str, Any] = {}
+
+    # both fused compositions shard KV over the row axis
+    if shp.skv % dm:
+        fall(ATTN_KV_NOT_DIVISIBLE, mode, "unfused_attn")
+        mode = "unfused_attn"
+        axes, kwargs = {"row": row_axis, "col": col_axis}, {}
+    else:
+        # head sharding over the column axis: query heads must divide, and
+        # KV heads must either divide too or be fully replicable (MQA /
+        # MLA-absorbed, hkv == 1). Otherwise replicate heads — a kwarg
+        # demotion (recorded, mode unchanged), exactly like scatter->psum.
+        head_shard = (dn > 1 and shp.h % dn == 0
+                      and (shp.hkv % dn == 0 or shp.hkv == 1))
+        if dn > 1 and not head_shard:
+            fall(ATTN_HEADS_REPLICATED, mode, mode)
+        kwargs = {"composition": comp, "head_shard": head_shard,
+                  "kv_chunk": int(getattr(schedule, "kv_chunk", 256))}
+
+    return ExecPlan(mode=mode, axes=axes, kwargs=kwargs, view=None,
+                    requested=getattr(schedule, "dataflow", "flat_attention"),
+                    grid=(dm, dn, 1), shape=(shp.sq, shp.skv, shp.h),
+                    fallbacks=tuple(fallbacks), inner_kernel=None,
+                    overlap=False)
 
 
 def lowering_summary(plans: Sequence[ExecPlan]) -> Dict[str, Any]:

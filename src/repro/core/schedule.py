@@ -47,6 +47,87 @@ class GEMMShape:
 
 
 @dataclasses.dataclass(frozen=True)
+class AttnShape:
+    """One fused-attention composition problem (FlatAttention).
+
+    Unlike a GEMM, attention has no single (m, n, k): the QKᵀ and PV
+    contractions share the KV sequence axis and are glued by the online
+    softmax, so the planner keys attention work on the full geometry.
+    Separate `d` (QK head dim) and `dv` (V head dim) cover MLA's absorbed
+    decode, whose keys are rank+rope wide but whose values are rank wide.
+    Frozen + hashable so it can serve as a plan-cache key exactly like
+    `GEMMShape`.
+    """
+    b: int              # batch
+    sq: int             # query sequence length (decode: 1 per step)
+    skv: int            # key/value sequence length (decode: cache capacity)
+    h: int              # query heads
+    hkv: int            # KV heads (GQA groups; 1 = MQA / MLA-absorbed)
+    d: int              # QK head dim
+    dv: int             # V head dim
+    causal: bool = True
+
+    def flops(self) -> int:
+        """QKᵀ (2·b·h·sq·skv·d) + PV (2·b·h·sq·skv·dv)."""
+        return 2 * self.b * self.h * self.sq * self.skv * (self.d + self.dv)
+
+    def min_bytes(self, elem_bytes: int = 4) -> int:
+        """Compulsory HBM traffic: read Q and KV once, write O once."""
+        q = self.b * self.sq * self.h * self.d
+        kv = self.b * self.skv * self.hkv * (self.d + self.dv)
+        o = self.b * self.sq * self.h * self.dv
+        return elem_bytes * (q + kv + o)
+
+    def intensity(self, elem_bytes: int = 4) -> float:
+        return self.flops() / self.min_bytes(elem_bytes)
+
+    def describe(self) -> str:
+        c = "causal" if self.causal else "full"
+        return (f"attn[b{self.b} q{self.sq} kv{self.skv} "
+                f"h{self.h}/{self.hkv} d{self.d}v{self.dv} {c}]")
+
+
+# The fused attention dataflow name. Deliberately NOT in `DATAFLOWS`: every
+# name there has a BSP `build_program` builder, while flat attention lowers
+# through `lower_attention` to its own exec modes and is priced by
+# `sim.perf.estimate_attention`.
+ATTN_DATAFLOW = "flat_attention"
+
+# collective compositions the fused dataflow can run as (docs/dataflows.md):
+#   merge — KV row-sharded, every device scans its local KV, one final
+#           pmax/psum combine of (m, l, acc) partials across the row axis;
+#   ring  — Q additionally row-sharded over sq, KV blocks rotate around a
+#           `ppermute` ring so each device sees the full KV stream.
+ATTN_COMPOSITIONS = ("merge", "ring")
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSchedule:
+    """One point in the fused-attention deployment space.
+
+    The candidate space is tiny compared to GEMMs — composition × KV chunk —
+    because the head/batch mapping is dictated by the mesh (head sharding is
+    a lowering legality question, not a tunable). `kv_chunk` is the KV tile
+    one superstep streams through L1 (larger amortizes softmax passes and
+    barriers, smaller fits the working set).
+    """
+    shape: AttnShape
+    composition: str = "merge"
+    kv_chunk: int = 256
+    dataflow: str = ATTN_DATAFLOW
+    elem_bytes: int = 4
+    elem_dtype: str = ""
+    # parity with Schedule's dispatch contract (pattn provenance rows carry
+    # inner_kernel/overlap keys like pmm's; attention has no inner kernel)
+    inner_kernel: Optional[InnerKernel] = None
+    overlap: bool = False
+
+    def describe(self) -> str:
+        return (f"{self.dataflow}/{self.composition}"
+                f"[kv_chunk={self.kv_chunk}] {self.shape.describe()}")
+
+
+@dataclasses.dataclass(frozen=True)
 class Tiling:
     """3-D mapping of the GEMM onto the logical grid (paper §3.1).
 

@@ -25,19 +25,27 @@ from repro.deploy.plan import DeploymentPlan, hw_fingerprint
 
 # (m, n, k, elem_bytes, hw_digest, variant) — variant tags a restricted
 # search space ("" = unrestricted) so constrained tunes never collide with
-# the unrestricted winner for the same shape.
-Key = Tuple[int, int, int, int, str, str]
+# the unrestricted winner for the same shape. Attention shapes keep the
+# 6-slot arity (iterators unpack keys positionally) but discriminate by a
+# string first slot encoding the full AttnShape geometry.
+Key = Tuple[object, int, int, int, str, str]
 
 
-def plan_key(shape: GEMMShape, elem_bytes: int, hw_digest: str,
+def plan_key(shape, elem_bytes: int, hw_digest: str,
              variant: str = "") -> Key:
+    if hasattr(shape, "skv"):       # AttnShape
+        tag = (f"attn_b{shape.b}_q{shape.sq}_kv{shape.skv}"
+               f"_h{shape.h}x{shape.hkv}_d{shape.d}v{shape.dv}"
+               f"_c{int(shape.causal)}")
+        return (tag, 0, 0, elem_bytes, hw_digest, variant)
     return (shape.m, shape.n, shape.k, elem_bytes, hw_digest, variant)
 
 
 def _filename(key: Key) -> str:
     m, n, k, eb, digest, variant = key
     tag = f"_v{variant}" if variant else ""
-    return f"m{m}_n{n}_k{k}_e{eb}_{digest}{tag}.plan.json"
+    head = m if isinstance(m, str) else f"m{m}_n{n}_k{k}"
+    return f"{head}_e{eb}_{digest}{tag}.plan.json"
 
 
 @dataclasses.dataclass
@@ -126,6 +134,8 @@ class PlanCache:
         """Tuned shapes usable on `hw` — the bucketing layer's search pool."""
         digest = hw_fingerprint(hw)
         for (m, n, k, eb, d, v) in self._mem:
+            if isinstance(m, str):
+                continue        # attention plans are not bucketing seeds
             if eb == elem_bytes and d == digest and v == variant:
                 yield GEMMShape(m, n, k)
 

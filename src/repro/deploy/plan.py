@@ -18,7 +18,8 @@ from typing import Any, Dict
 
 from repro.core import layout as layout_lib
 from repro.core.remap import ClusterRemap
-from repro.core.schedule import GEMMShape, InnerKernel, Schedule, Tiling
+from repro.core.schedule import (ATTN_DATAFLOW, AttnSchedule, AttnShape,
+                                 GEMMShape, InnerKernel, Schedule, Tiling)
 from repro.hw.config import AcceleratorConfig
 from repro.sim.perf import PerfReport
 
@@ -63,6 +64,20 @@ def _layout_from_dict(d: Dict[str, Any]) -> layout_lib.DataLayout:
 
 
 def schedule_to_dict(sched: Schedule) -> Dict[str, Any]:
+    if isinstance(sched, AttnSchedule):
+        # discriminated by "kind" — absent means GEMM, so pre-attention
+        # plan files keep loading under the same schema version
+        s = sched.shape
+        return {
+            "kind": "attention",
+            "shape": [s.b, s.sq, s.skv, s.h, s.hkv, s.d, s.dv,
+                      int(s.causal)],
+            "composition": sched.composition,
+            "kv_chunk": sched.kv_chunk,
+            "dataflow": sched.dataflow,
+            "elem_bytes": sched.elem_bytes,
+            "elem_dtype": sched.elem_dtype,
+        }
     return {
         "shape": [sched.shape.m, sched.shape.n, sched.shape.k],
         "tiling": [sched.tiling.gm, sched.tiling.gn, sched.tiling.gk,
@@ -86,6 +101,17 @@ def schedule_to_dict(sched: Schedule) -> Dict[str, Any]:
 
 
 def schedule_from_dict(d: Dict[str, Any]) -> Schedule:
+    if d.get("kind") == "attention":
+        b, sq, skv, h, hkv, dd, dv, causal = d["shape"]
+        return AttnSchedule(
+            shape=AttnShape(b=int(b), sq=int(sq), skv=int(skv), h=int(h),
+                            hkv=int(hkv), d=int(dd), dv=int(dv),
+                            causal=bool(causal)),
+            composition=d["composition"],
+            kv_chunk=int(d["kv_chunk"]),
+            dataflow=d.get("dataflow", ATTN_DATAFLOW),
+            elem_bytes=int(d["elem_bytes"]),
+            elem_dtype=d.get("elem_dtype", ""))
     remap = None
     if d.get("remap"):
         phys, logi = d["remap"]
@@ -193,7 +219,9 @@ class DeploymentPlan:
 
     def describe(self) -> str:
         s = self.shape
-        return (f"plan[{s.m}x{s.n}x{s.k} e{self.elem_bytes} {self.source} "
+        head = (s.describe() if hasattr(s, "skv")
+                else f"{s.m}x{s.n}x{s.k}")
+        return (f"plan[{head} e{self.elem_bytes} {self.source} "
                 f"@{self.hw_name}] {self.schedule.describe()} "
                 f"est={self.report.total_time*1e6:.1f}us")
 
@@ -219,7 +247,11 @@ def plan_admissible(plan: DeploymentPlan, dataflows,
     ranked under a different calibration regime (analytical plans after a
     trusted profile landed, or vice versa), is a miss — it gets re-tuned
     and replaced, never silently served."""
-    if dataflows is not None and plan.schedule.dataflow not in dataflows:
+    df = plan.schedule.dataflow
+    # a dataflow-restricted GEMM search space does not constrain attention
+    # plans — flat_attention is its own (single-dataflow) space, priced by
+    # the same calibration regime
+    if dataflows is not None and df not in dataflows and df != ATTN_DATAFLOW:
         return False
     return plan.calibration_digest == calibration_digest
 

@@ -29,8 +29,9 @@ import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.analytic import DEFAULT_SHORTLIST_K, analytic_tune
+from repro.core.attention import attn_tune
 from repro.core.autotuner import tune
-from repro.core.schedule import GEMMShape, build_program
+from repro.core.schedule import AttnShape, GEMMShape, build_program
 from repro.hw.config import AcceleratorConfig
 from repro.obs.trace import maybe_span
 from repro.sim.perf import estimate
@@ -109,6 +110,16 @@ class Planner:
             # dispatch path but never satisfies `plan`: here paying the full
             # search is the point, and the fresh tune replaces the entry.
             return cached
+        if isinstance(shape, AttnShape):
+            # the fused-attention candidate space IS the closed-form menu —
+            # there is no bigger search to pay, so the warm-up path caches
+            # the same winner as SOURCE_TUNED (it satisfies `plan` on
+            # re-lookup and never needs refinement)
+            plan = self._attn_plan(shape, source=SOURCE_TUNED)
+            if plan is None:
+                raise RuntimeError(f"no legal flat-attention candidate for "
+                                   f"{shape.describe()} on {self.hw.name}")
+            return plan
         if allow_bucketed:
             bucketed = self._bucketed_plan(shape)
             if bucketed is not None:
@@ -149,6 +160,11 @@ class Planner:
         return report.total_time
 
     def _bucketed_plan(self, shape: GEMMShape) -> Optional[DeploymentPlan]:
+        if isinstance(shape, AttnShape):
+            # attention plans never transfer between shapes: legality is
+            # all-or-nothing divisibility, and the candidate menu is cheap
+            # enough to price exactly per shape
+            return None
         pool = list(self.cache.shapes_for(self.elem_bytes, self.hw,
                                           self.variant))
         best = None     # (time, schedule, report)
@@ -216,6 +232,8 @@ class Planner:
         """
         if not self.online_tune:
             return None
+        if isinstance(shape, AttnShape):
+            return self._attn_plan(shape)
         with maybe_span("planner.online_tune", m=shape.m, n=shape.n,
                         k=shape.k) as span_args:
             try:
@@ -239,6 +257,40 @@ class Planner:
                                 calibration_digest=res.calibration)
         self.cache.put(plan)
         self._pending.append(shape)
+        self._emit(plan)
+        return plan
+
+    def _attn_plan(self, shape: AttnShape,
+                   source: str = SOURCE_ANALYTIC) -> Optional[DeploymentPlan]:
+        """Resolve a fused-attention shape through the closed-form candidate
+        menu (core/attention.attn_tune — composition × kv_chunk, priced by
+        `sim.perf.estimate_attention` under the planner's calibration).
+
+        The space is tiny, so the same bounded pricing serves both the
+        serving path (`plan_cached` → SOURCE_ANALYTIC) and the warm-up path
+        (`plan` → SOURCE_TUNED). Never queued for refinement — there is no
+        fuller search to validate against. Returns None when no fused
+        candidate is legal (the pattn funnel falls back to the unfused
+        path and counts the miss).
+        """
+        with maybe_span("planner.online_tune", attn=shape.describe(),
+                        sq=shape.sq, skv=shape.skv, h=shape.h) as span_args:
+            try:
+                res = attn_tune(shape, self.hw, elem_bytes=self.elem_bytes,
+                                calibration=self.calibration)
+            except RuntimeError:
+                if span_args is not None:
+                    span_args["resolved"] = False
+                return None
+            if span_args is not None:
+                span_args.update(resolved=True,
+                                 candidates=res.candidates_tried,
+                                 schedule=res.schedule.describe())
+        plan = plan_from_tuning(shape, self.hw, res.schedule, res.report,
+                                candidates_tried=res.candidates_tried,
+                                source=source, variant=self.variant,
+                                calibration_digest=res.calibration)
+        self.cache.put(plan)
         self._emit(plan)
         return plan
 
@@ -435,8 +487,11 @@ def model_workload(cfg, batch: int, seq: int,
         gemm(tokens, cfg.rope_head_dim, d)
         if kind == "decode":
             # absorbed form: W_uk folds into the query and W_uv un-absorbs
-            # the latent output — per-head (r x dn) contractions, no K/V
-            # up-projection ever runs
+            # the latent output — n_heads per-head (r x dn) contractions
+            # each, no K/V up-projection ever runs. The shape list is a
+            # set (coverage is membership-based); the per-head multiplicity
+            # lives in the observed counts: attention.mla_attention records
+            # these two with count=n_heads per call.
             gemm(tokens, cfg.kv_lora_rank, cfg.nope_head_dim)
             gemm(tokens, cfg.nope_head_dim, cfg.kv_lora_rank)
         else:

@@ -17,9 +17,20 @@ import jax.numpy as jnp
 
 from repro.models.common import (ModelConfig, Params, apply_rope, dense_init,
                                  rms_head_norm, rope_tables)
-from repro.models.matmul import pmm
+from repro.models.matmul import pattn, pmm
 
 NEG_INF = -1e30
+
+
+def _chunk(s: int, target: int) -> int:
+    """Chunk size for a length-`s` axis: the target, capped at `s`.
+
+    The tail block is padded up to a full chunk and masked off inside
+    `_flash` — chunk count stays O(s / target) for EVERY length. (The old
+    rule walked down to the largest divisor of `s`, so prime or ragged
+    lengths — a 4673-token VLM prefix — degraded to chunk=1 and scanned
+    thousands of singleton blocks.)"""
+    return max(1, min(target, s))
 
 
 def gqa_params(key, cfg: ModelConfig) -> Params:
@@ -33,10 +44,12 @@ def gqa_params(key, cfg: ModelConfig) -> Params:
     }
 
 
-def _flash_fwd(q, k, v, causal: bool, scale: float, cq: int, ck: int):
+def _flash_fwd(q, k, v, causal: bool, scale: float, cq: int, ck: int,
+               sk_valid: int):
     """Streaming online-softmax forward. q: (b,nq,cq,hkv,g,d) fp32;
     k/v: (b,nk,ck,hkv,d|dv) fp32. Returns out (b,nq,cq,hkv,g,dv) and
-    lse (b,nq,cq,hkv,g)."""
+    lse (b,nq,cq,hkv,g). Key positions >= `sk_valid` are tail padding
+    (ragged lengths are padded to a full chunk) and masked off."""
     from repro.models import accounting
     b, nq, cq_, hkv, g, d = q.shape
     nk = k.shape[1]
@@ -47,11 +60,15 @@ def _flash_fwd(q, k, v, causal: bool, scale: float, cq: int, ck: int):
             m_run, l_run, acc = carry
             kj, k_blk, v_blk = inputs
             logits = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk) * scale
+            kpos = kj * ck + jnp.arange(ck)
             if causal:
                 qpos = qi * cq + jnp.arange(cq)
-                kpos = kj * ck + jnp.arange(ck)
                 mask = kpos[None, :] <= qpos[:, None]
                 logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            if nk * ck > sk_valid:      # static: padding exists
+                valid = kpos < sk_valid
+                logits = jnp.where(valid[None, None, None, None, :],
+                                   logits, NEG_INF)
             m_new = jnp.maximum(m_run, logits.max(-1))
             p = jnp.exp(logits - m_new[..., None])
             corr = jnp.exp(m_run - m_new)
@@ -76,18 +93,18 @@ def _flash_fwd(q, k, v, causal: bool, scale: float, cq: int, ck: int):
     return outs.swapaxes(0, 1), lses.swapaxes(0, 1)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def _flash(q, k, v, causal, scale, cq, ck):
-    out, _ = _flash_fwd(q, k, v, causal, scale, cq, ck)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, scale, cq, ck, sk_valid):
+    out, _ = _flash_fwd(q, k, v, causal, scale, cq, ck, sk_valid)
     return out
 
 
-def _flash_vjp_fwd(q, k, v, causal, scale, cq, ck):
-    out, lse = _flash_fwd(q, k, v, causal, scale, cq, ck)
+def _flash_vjp_fwd(q, k, v, causal, scale, cq, ck, sk_valid):
+    out, lse = _flash_fwd(q, k, v, causal, scale, cq, ck, sk_valid)
     return out, (q, k, v, out, lse)
 
 
-def _flash_vjp_bwd(causal, scale, cq, ck, res, dout):
+def _flash_vjp_bwd(causal, scale, cq, ck, sk_valid, res, dout):
     """Flash backward: recompute p block-by-block from lse; O(S) memory."""
     from repro.models import accounting
     q, k, v, out, lse = res
@@ -104,11 +121,15 @@ def _flash_vjp_bwd(causal, scale, cq, ck, res, dout):
             dq_blk, dk_acc, dv_acc = inner
             kj, k_blk, v_blk = kv_inputs
             logits = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk) * scale
+            kpos = kj * ck + jnp.arange(ck)
             if causal:
                 qpos = qi * cq + jnp.arange(cq)
-                kpos = kj * ck + jnp.arange(ck)
                 mask = kpos[None, :] <= qpos[:, None]
                 logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            if nk * ck > sk_valid:      # same tail mask as the forward
+                valid = kpos < sk_valid
+                logits = jnp.where(valid[None, None, None, None, :],
+                                   logits, NEG_INF)
             p = jnp.exp(logits - lse_blk.transpose(0, 2, 3, 1)[..., None])
             dp = jnp.einsum("bqhgd,bkhd->bhgqk", do_blk, v_blk)
             ds = p * (dp - dl_blk.transpose(0, 2, 3, 1)[..., None]) * scale
@@ -154,25 +175,24 @@ def chunked_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
     dv = v.shape[-1]
     g = h // hkv
 
-    def fit(s, target):
-        # largest chunk <= target that divides s (VLM prefixes make seq
-        # lengths like 4672 = 4096 + 576 patches)
-        c = min(target, s)
-        while s % c:
-            c -= 1
-        return c
-
-    cq = fit(sq, accounting.chunk(chunk_q))
-    ck = fit(sk, accounting.chunk(chunk_k))
-    nq, nk = sq // cq, sk // ck
+    cq = _chunk(sq, accounting.chunk(chunk_q))
+    ck = _chunk(sk, accounting.chunk(chunk_k))
+    # ragged lengths (VLM prefixes make seq lengths like 4672 = 4096 + 576
+    # patches, or primes) pad the tail block up to a full chunk; padded key
+    # positions are masked inside _flash, padded query rows are sliced off
+    nq, nk = -(-sq // cq), -(-sk // ck)
+    pad_q, pad_k = nq * cq - sq, nk * ck - sk
     if scale is None:
         scale = d ** -0.5
 
-    qc = q.reshape(b, nq, cq, hkv, g, d).astype(jnp.float32)
-    kc = k.reshape(b, nk, ck, hkv, d).astype(jnp.float32)
-    vc = v.reshape(b, nk, ck, hkv, dv).astype(jnp.float32)
-    out = _flash(qc, kc, vc, causal, scale, cq, ck)
-    return out.reshape(b, sq, h, dv).astype(q.dtype)
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    qc = qp.reshape(b, nq, cq, hkv, g, d).astype(jnp.float32)
+    kc = kp.reshape(b, nk, ck, hkv, d).astype(jnp.float32)
+    vc = vp.reshape(b, nk, ck, hkv, dv).astype(jnp.float32)
+    out = _flash(qc, kc, vc, causal, scale, cq, ck, sk)
+    return out.reshape(b, nq * cq, h, dv)[:, :sq].astype(q.dtype)
 
 
 def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
@@ -214,6 +234,12 @@ def gqa_attention(p: Params, x: jax.Array, cfg: ModelConfig,
     this step's K/V at position `cache['index']` and attends to the prefix.
     kv_input: encoder output for cross-attention (no cache update then unless
     it is the first step)."""
+    if cache is not None and kv_input is not None:
+        # the decode branch would silently write the encoder output into the
+        # self-attention cache and RoPE it — no caller means that
+        raise ValueError("gqa_attention: cache and kv_input are mutually "
+                         "exclusive (cached cross-attention is not "
+                         "supported; precompute encoder K/V instead)")
     b, s, _ = x.shape
     hd = cfg.hd
     kv_src = kv_input if kv_input is not None else x
@@ -230,18 +256,26 @@ def gqa_attention(p: Params, x: jax.Array, cfg: ModelConfig,
         k = apply_rope(k, cos_q, sin_q)
 
     if cache is None:
+        self_causal = causal and kv_input is None
         if s > 1024 and kv_src.shape[1] > 1024:
-            out = chunked_sdpa(q, k, v, causal=causal and kv_input is None)
+            unfused = lambda: chunked_sdpa(q, k, v, causal=self_causal)
         else:
-            out = _sdpa(q, k, v, causal=causal and kv_input is None)
+            unfused = lambda: _sdpa(q, k, v, causal=self_causal)
+        out = pattn(q, k, v, causal=self_causal, tag="attn.sdpa",
+                    unfused=unfused)
         new_cache = None
     else:
         idx = cache["index"]                              # scalar int32
         ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, axis=1)
         cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, axis=1)
         kv_len = jnp.full((b,), idx + s, dtype=jnp.int32)
-        out = _sdpa(q, ck, cv, causal=True, q_positions=positions,
-                    kv_len=kv_len)
+        # thread the caller's causal flag — hard-coding True here broke
+        # non-causal decode (prefix-LM scoring attends to the whole prefix)
+        out = pattn(q, ck, cv, causal=causal, q_positions=positions,
+                    kv_len=kv_len, tag="attn.decode",
+                    unfused=lambda: _sdpa(q, ck, cv, causal=causal,
+                                          q_positions=positions,
+                                          kv_len=kv_len))
         new_cache = {"k": ck, "v": cv, "index": idx + s}
     return pmm(out.reshape(b, s, cfg.n_heads * hd), p["wo"],
                tag="attn.o"), new_cache
@@ -323,28 +357,37 @@ def mla_attention(p: Params, x: jax.Array, cfg: ModelConfig,
             [k_nope, jnp.broadcast_to(k_r, (b, sk, h, dr))], axis=-1)
         q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
         if s > 1024:
-            out = chunked_sdpa(q_full, k_full, v, causal=True, scale=scale)
+            unfused = lambda: chunked_sdpa(q_full, k_full, v, causal=True,
+                                           scale=scale)
         else:
-            out = _sdpa(q_full, k_full, v, causal=True, scale=scale)
+            unfused = lambda: _sdpa(q_full, k_full, v, causal=True,
+                                    scale=scale)
+        out = pattn(q_full, k_full, v, causal=True, scale=scale,
+                    tag="mla.sdpa", unfused=unfused)
         out = out.reshape(b, s, h * dn)
         return pmm(out, p["wo"], tag="mla.o"), new_cache
 
     # absorbed form (decode): q_lat[h] = q_nope[h] @ W_uk[h]^T  (b,s,h,r)
     # per-head batched contraction, not a single dense GEMM — stays einsum
-    # but is logged so the observed workload covers the absorbed path
+    # but is logged so the observed workload covers the absorbed path. The
+    # einsum is n_heads independent (b*s, r, dn) contractions, so count=h —
+    # a single record undercounted the absorbed decode workload ~h×
     from repro.models.matmul import record_gemm
-    record_gemm("mla.q_absorb", b * s, r, dn)
+    record_gemm("mla.q_absorb", b * s, r, dn, count=h)
     w_uk = p["w_uk"].reshape(r, h, dn)
     q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
     q_aug = jnp.concatenate([q_lat, q_rope], axis=-1)      # (b,s,h,r+dr)
     k_aug = jnp.concatenate([c_kv[:, :, None, :], k_r], axis=-1)  # (b,sk,1,r+dr)
     v_lat = c_kv[:, :, None, :]                            # (b,sk,1,r)
-    o_lat = _sdpa(q_aug, k_aug, v_lat, causal=True,
-                  q_positions=positions,
-                  kv_len=jnp.full((b,), kv_len, jnp.int32),
-                  scale=scale)
-    # un-absorb the values: out[h] = o_lat @ W_uv[h]
-    record_gemm("mla.v_unabsorb", b * s, dn, r)
+    kv_len_b = jnp.full((b,), kv_len, jnp.int32)
+    o_lat = pattn(q_aug, k_aug, v_lat, causal=True, q_positions=positions,
+                  kv_len=kv_len_b, scale=scale, tag="mla.decode",
+                  unfused=lambda: _sdpa(q_aug, k_aug, v_lat, causal=True,
+                                        q_positions=positions,
+                                        kv_len=kv_len_b, scale=scale))
+    # un-absorb the values: out[h] = o_lat @ W_uv[h] — again h per-head
+    # (b*s, dn, r) contractions in one einsum
+    record_gemm("mla.v_unabsorb", b * s, dn, r, count=h)
     w_uv = p["w_uv"].reshape(r, h, dn)
     out = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv).reshape(b, s, h * dn)
     return pmm(out, p["wo"], tag="mla.o"), new_cache

@@ -35,7 +35,7 @@ from typing import Optional
 
 import jax
 
-from repro.core.schedule import GEMMShape
+from repro.core.schedule import AttnShape, GEMMShape
 from repro.models import shard_ctx
 from repro.obs import trace as obs_trace
 
@@ -51,12 +51,14 @@ def _routable(x: jax.Array, w: jax.Array) -> bool:
             and all(int(d) > 0 for d in x.shape))
 
 
-def record_gemm(tag: str, m: int, n: int, k: int) -> None:
+def record_gemm(tag: str, m: int, n: int, k: int, count: int = 1) -> None:
     """Log a GEMM executed outside `pmm` (batched expert einsums etc.) so the
-    observed workload covers everything the model runs."""
+    observed workload covers everything the model runs. `count` > 1 logs one
+    einsum that stands for `count` independent contractions of this shape
+    (MLA's absorbed form runs one per head)."""
     ctx = shard_ctx.get_gemm_context()
-    if ctx is not None and m > 0 and n > 0 and k > 0:
-        ctx.stats.record(tag, GEMMShape(m, n, k))
+    if ctx is not None and m > 0 and n > 0 and k > 0 and count > 0:
+        ctx.stats.record(tag, GEMMShape(m, n, k), count=count)
 
 
 def lookup_plan(planner, shape: GEMMShape):
@@ -147,7 +149,14 @@ def pmm(x: jax.Array, w: jax.Array, tag: str = "") -> jax.Array:
     if ctx is None:
         return x @ w
     if not _routable(x, w):
-        # not a single dense GEMM this layer understands; stay out of the way
+        # not a single dense GEMM this layer understands; stay out of the
+        # way — but record it first, or the observed workload silently
+        # undercounts whatever the model ran through here
+        if (x.ndim >= 1 and w.ndim >= 2 and x.shape[-1] == w.shape[-2]
+                and all(int(d) > 0 for d in x.shape)
+                and all(int(d) > 0 for d in w.shape)):
+            ctx.stats.record(tag, _gemm_shape(x, w))
+        ctx.stats.unroutable += 1
         return x @ w
     shape = _gemm_shape(x, w)
     ctx.stats.record(tag, shape)
@@ -175,4 +184,108 @@ def pmm(x: jax.Array, w: jax.Array, tag: str = "") -> jax.Array:
         f"pmm.dispatch_us.mode.{prov.get('mode', 'auto')}", dispatch_us)
     tracer.metrics.observe(
         f"pmm.dispatch_us.tag.{tag or 'untagged'}", dispatch_us)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pattn: the attention funnel (pmm's shape, applied to fused attention)
+# ---------------------------------------------------------------------------
+
+def _attn_shape(q: jax.Array, k: jax.Array, v: jax.Array,
+                causal: bool) -> AttnShape:
+    """The attention problem the call solves: q (b, sq, h, d);
+    k (b, skv, hkv, d); v (b, skv, hkv, dv)."""
+    b, sq, h, d = (int(s) for s in q.shape)
+    skv, hkv = int(k.shape[1]), int(k.shape[2])
+    return AttnShape(b=b, sq=sq, skv=skv, h=h, hkv=hkv, d=d,
+                     dv=int(v.shape[-1]), causal=bool(causal))
+
+
+def _dispatch_attn(ctx, q, k, v, shape: AttnShape, causal, scale,
+                   q_positions, kv_len, unfused, prov: dict, tracer):
+    """Routed attention dispatch: plan consult -> lower_attention ->
+    flat_attention, mirroring `_dispatch_routed` step for step. A shape
+    with no plan (or one lowered to `unfused_attn`) executes the caller's
+    `unfused` closure — the degrade target is always the named unfused
+    path, never a silent mode switch."""
+    plan, kind = None, None
+    if ctx.planner is not None:
+        t0 = time.perf_counter()
+        plan, kind = lookup_plan(ctx.planner, shape)
+        resolve_us = (time.perf_counter() - t0) * 1e6
+        prov["plan_resolve_us"] = round(resolve_us, 1)
+        if tracer is not None:
+            tracer.metrics.observe("pattn.plan_resolve_us", resolve_us)
+        if kind == "hit":
+            ctx.stats.hits += 1
+        elif kind == "bucketed":
+            ctx.stats.bucketed += 1
+        elif kind == "analytic":
+            ctx.stats.analytic += 1
+    if plan is None:
+        ctx.stats.fallback += 1
+        prov.update(provenance="fallback", mode="unfused_attn",
+                    inner_kernel=None, overlap=False)
+        return unfused()
+    from repro.core.lower import lower_attention
+    exec_plan = lower_attention(getattr(plan, "schedule", plan), ctx.mesh,
+                                ctx.row_axis, ctx.col_axis, shape=shape)
+    ctx.stats.record_lowering(exec_plan)
+    prov.update(provenance=kind, mode=exec_plan.mode,
+                reasons=list(exec_plan.reasons()),
+                inner_kernel=None, overlap=False,
+                attn_schedule=getattr(plan, "schedule", plan).describe())
+    report = getattr(plan, "report", None)
+    if report is not None:
+        prov["predicted_s"] = report.total_time
+    if tracer is not None:
+        if hasattr(plan, "digest"):
+            prov["plan_digest"] = plan.digest()
+        prov["calibration_digest"] = getattr(plan, "calibration_digest", "")
+    if exec_plan.mode == "unfused_attn":
+        return unfused()
+    from repro.core.attention import flat_attention
+    return flat_attention(q, k, v, ctx.mesh, exec_plan, causal=causal,
+                          scale=scale, q_positions=q_positions,
+                          kv_len=kv_len)
+
+
+def pattn(q: jax.Array, k: jax.Array, v: jax.Array, *, unfused,
+          causal: bool = True, tag: str = "", scale=None,
+          q_positions=None, kv_len=None) -> jax.Array:
+    """Plan-routed attention. q: (b, sq, h, d); k/v: (b, skv, hkv, d|dv) ->
+    (b, sq, h, dv). `unfused` is the zero-arg reference path the call
+    degrades to when routing is off or the lowering says fused is illegal
+    — every degrade is counted and carries a machine-readable reason."""
+    ctx = shard_ctx.get_gemm_context()
+    if ctx is None:
+        return unfused()
+    shape = _attn_shape(q, k, v, causal)
+    ctx.stats.record_attn(tag, shape)
+    tracer = obs_trace.get_tracer()
+    if ctx.mesh is None:
+        ctx.stats.unrouted += 1
+        if tracer is not None:
+            tracer.instant(f"pattn.{tag or 'untagged'}", tag=tag,
+                           shape=[shape.b, shape.sq, shape.skv, shape.h,
+                                  shape.hkv, shape.d, shape.dv],
+                           provenance="unrouted")
+            tracer.metrics.counter("pattn.provenance.unrouted").inc()
+        return unfused()
+    if tracer is None:
+        return _dispatch_attn(ctx, q, k, v, shape, causal, scale,
+                              q_positions, kv_len, unfused, {}, None)
+    t0 = time.perf_counter()
+    with tracer.span(f"pattn.{tag or 'untagged'}", cat=obs_trace.CAT_PMM,
+                     tag=tag, shape=[shape.b, shape.sq, shape.skv, shape.h,
+                                     shape.hkv, shape.d, shape.dv]) as prov:
+        out = _dispatch_attn(ctx, q, k, v, shape, causal, scale,
+                             q_positions, kv_len, unfused, prov, tracer)
+    dispatch_us = (time.perf_counter() - t0) * 1e6
+    tracer.metrics.counter(f"pattn.provenance.{prov['provenance']}").inc()
+    tracer.metrics.observe(
+        f"pattn.dispatch_us.mode.{prov.get('mode', 'unfused_attn')}",
+        dispatch_us)
+    tracer.metrics.observe(
+        f"pattn.dispatch_us.tag.{tag or 'untagged'}", dispatch_us)
     return out

@@ -64,7 +64,15 @@ class GemmStats:
     analytic: int = 0      # served an online-tuned (analytic shortlist) plan
     fallback: int = 0      # no usable plan -> auto dataflow
     unrouted: int = 0      # recorded but not routed (no mesh in the context)
+    unroutable: int = 0    # pmm calls that are not a single dense GEMM
+    #                        (batched weights etc.) — recorded, never routed
     observed: Dict[Tuple[str, object], int] = dataclasses.field(
+        default_factory=dict)
+    # attention dispatches (pattn) keep a separate observed map: the GEMM
+    # `observed` feeds `workload_coverage`/`observed_shapes`, whose consumers
+    # sort on (m, n, k) and rebuild `GEMMShape(*shape)` — an AttnShape there
+    # would crash them. Keys are (tag, AttnShape).
+    attn_observed: Dict[Tuple[str, object], int] = dataclasses.field(
         default_factory=dict)
     # schedule->mesh lowering outcomes (repro.core.lower.ExecPlan): which
     # mode each plan-served matmul actually executed, and the
@@ -75,9 +83,16 @@ class GemmStats:
     #                            (structurally 0: every ExecPlan fallback
     #                            carries a reason; kept as the cross-check)
 
-    def record(self, tag: str, shape) -> None:
+    def record(self, tag: str, shape, count: int = 1) -> None:
+        """`count` > 1 logs one traced call that stands for `count` GEMMs of
+        this shape (MLA's absorbed form runs n_heads per-head contractions
+        in one einsum)."""
         key = (tag, shape)
-        self.observed[key] = self.observed.get(key, 0) + 1
+        self.observed[key] = self.observed.get(key, 0) + count
+
+    def record_attn(self, tag: str, shape) -> None:
+        key = (tag, shape)
+        self.attn_observed[key] = self.attn_observed.get(key, 0) + 1
 
     def record_lowering(self, exec_plan) -> None:
         """Count an ExecPlan's executed mode + its fallback-chain reasons."""
@@ -120,6 +135,7 @@ class GemmStats:
             "analytic": self.analytic,
             "fallback": self.fallback,
             "unrouted": self.unrouted,
+            "unroutable": self.unroutable,
             "resolve_rate": self.resolve_rate,
             "modes": dict(sorted(self.modes.items())),
             "degrades": dict(sorted(self.degrades.items())),
@@ -130,22 +146,35 @@ class GemmStats:
                            if hasattr(s, "m") else list(s)),
                  "count": count}
                 for (tag, s), count in self.observed.items()],
+            "attn_observed": [
+                {"tag": tag,
+                 "shape": [int(s.b), int(s.sq), int(s.skv), int(s.h),
+                           int(s.hkv), int(s.d), int(s.dv),
+                           int(s.causal)],
+                 "count": count}
+                for (tag, s), count in self.attn_observed.items()],
         }
 
     @classmethod
     def from_dict(cls, d: Dict[str, object]) -> "GemmStats":
         """Rebuild a stats object from `to_dict()` output (derived fields
         like `calls`/`routed`/`resolve_rate` are recomputed, not read)."""
-        from repro.core.schedule import GEMMShape
+        from repro.core.schedule import AttnShape, GEMMShape
         stats = cls(hits=int(d["hits"]), bucketed=int(d["bucketed"]),
                     analytic=int(d.get("analytic", 0)),
                     fallback=int(d["fallback"]), unrouted=int(d["unrouted"]),
+                    unroutable=int(d.get("unroutable", 0)),
                     modes=dict(d.get("modes", {})),
                     degrades=dict(d.get("degrades", {})),
                     silent_degrades=int(d.get("silent_degrades", 0)))
         for rec in d.get("observed", []):
             key = (rec["tag"], GEMMShape(*rec["shape"]))
             stats.observed[key] = int(rec["count"])
+        for rec in d.get("attn_observed", []):
+            b, sq, skv, h, hkv, dd, dv, causal = rec["shape"]
+            key = (rec["tag"], AttnShape(b, sq, skv, h, hkv, dd, dv,
+                                         bool(causal)))
+            stats.attn_observed[key] = int(rec["count"])
         return stats
 
     def describe(self) -> str:

@@ -359,3 +359,107 @@ def estimate_sweep(prog: Program, hw: AcceleratorConfig,
 def _matrix_shape(prog: Program, matrix: str) -> Tuple[int, int]:
     m, n, k = prog.shape
     return {"A": (m, k), "B": (k, n), "C": (m, n)}[matrix]
+
+
+# -- fused attention (FlatAttention) ------------------------------------------
+
+def _attn_gemm_time(tm: int, tn: int, tk: int, hw: AcceleratorConfig) -> float:
+    """Engine cycles for one (tm x tn x tk) contraction, legacy model (the
+    fused dataflow has no inner kernel — softmax sits between the two
+    contractions, so the Pallas mmad pipeline does not apply)."""
+    t = hw.tile
+    fill = t.ce_rows + t.ce_cols
+    chunks = math.ceil(tm / t.ce_rows) * math.ceil(tn / t.ce_cols)
+    return chunks * (tk + fill)
+
+
+def estimate_attention(sched, hw: AcceleratorConfig,
+                       head_shard: Optional[bool] = None) -> PerfReport:
+    """Price an `AttnSchedule` on `hw` with the same BSP superstep semantics
+    as `estimate`: per superstep the busiest resource bounds the phase, plus
+    a grid barrier; components accumulate so `resource_shares` (and hence
+    `CalibrationProfile.predict`) rescales attention exactly like GEMMs.
+
+    One superstep streams one `kv_chunk`-wide KV tile through L1: QKᵀ
+    (sq_l x chunk x d), ~4 vector passes over the logits for the online
+    softmax (max, exp, row-sum, rescale), then PV (sq_l x dv x chunk).
+
+    - **merge**: KV row-sharded; every device scans its local KV, then ONE
+      combine superstep pmax/psum-reduces the (m, l, acc) partials over the
+      row axis.
+    - **ring**: Q additionally row-sharded; the local KV shard rotates
+      around a ppermute ring, so each device runs dm passes and each step's
+      NoC phase carries the KV block to the next neighbour.
+
+    The caller guarantees lowering legality (skv % dm == 0; ring also
+    sq % dm == 0) — `attn_candidates` only emits legal schedules and
+    `lower_attention` re-checks at dispatch.
+    """
+    shp = sched.shape
+    dm, dn = hw.grid
+    eb = sched.elem_bytes
+    if head_shard is None:
+        head_shard = (dn > 1 and shp.h % dn == 0
+                      and (shp.hkv % dn == 0 or shp.hkv == 1))
+    h_l = shp.h // dn if head_shard else shp.h
+    hkv_l = shp.hkv // dn if (head_shard and shp.hkv % dn == 0) else shp.hkv
+    ring = sched.composition == "ring" and dm > 1
+    kv_l = max(1, shp.skv // max(1, dm))
+    sq_l = max(1, shp.sq // dm) if ring else shp.sq
+    chunk = max(1, min(sched.kv_chunk, kv_l))
+    steps_per_pass = math.ceil(kv_l / chunk)
+    passes = dm if ring else 1
+    n_steps = steps_per_pass * passes
+
+    t = hw.tile
+    # compute phase: both contractions + the softmax's vector passes, per
+    # (batch, local head), one KV chunk per superstep
+    cycles = (_attn_gemm_time(sq_l, chunk, shp.d, hw)
+              + _attn_gemm_time(sq_l, shp.dv, chunk, hw)
+              + 4 * sq_l * chunk)
+    engine = shp.b * h_l * cycles / t.clock_hz
+    feed = shp.b * (h_l * sq_l * shp.d + hkv_l * chunk * (shp.d + shp.dv)) * eb
+    comp_step = max(engine, feed / t.l1_bw)
+
+    # DMA phase: Q in + O out once, the local KV shard streamed once per
+    # pass; balanced channel layout, so the busiest channel carries the
+    # per-device share (global bytes / total HBM bandwidth)
+    q_bytes = shp.b * shp.sq * shp.h * shp.d * eb
+    o_bytes = shp.b * shp.sq * shp.h * shp.dv * eb
+    kv_bytes = shp.b * shp.skv * shp.hkv * (shp.d + shp.dv) * eb
+    hbm_bytes = q_bytes + o_bytes + kv_bytes * passes
+    dma_total = hbm_bytes / hw.hbm.total_bw
+    dma_step = dma_total / n_steps
+
+    hop = hw.noc.hop_latency_cycles / t.clock_hz
+    barrier = (dm + dn) * hop
+
+    if ring:
+        # each step also rotates the KV shard one hop around the ring
+        block = shp.b * kv_l * hkv_l * (shp.d + shp.dv) * eb
+        noc_step = block / hw.noc.link_bw + hop
+        noc_bytes = block * max(0, dm - 1)
+        total = n_steps * (max(comp_step, dma_step, noc_step) + barrier)
+        noc_time = noc_step * n_steps
+        n_supersteps = n_steps
+    else:
+        # scan supersteps, then one combine superstep reducing the fp32
+        # (m, l, acc) partials over the dm-member row tree
+        partial = shp.b * h_l * sq_l * (2 + shp.dv) * 4
+        noc_time = partial / hw.noc.link_bw + max(0, dm - 1) * hop
+        noc_bytes = partial * max(0, dm - 1)
+        total = (n_steps * (max(comp_step, dma_step) + barrier)
+                 + (noc_time + barrier if dm > 1 else 0.0))
+        n_supersteps = n_steps + (1 if dm > 1 else 0)
+        if dm <= 1:
+            noc_time = 0.0
+
+    compute_time = comp_step * n_steps
+    report = PerfReport(total_time=max(total, compute_time, dma_total,
+                                       noc_time, barrier),
+                        compute_time=compute_time, dma_time=dma_total,
+                        noc_time=noc_time,
+                        barrier_time=barrier * n_supersteps,
+                        total_flops=shp.flops(), hbm_bytes=hbm_bytes,
+                        noc_bytes=noc_bytes, n_supersteps=n_supersteps)
+    return report

@@ -79,6 +79,7 @@ def test_calibrate_flag_exists_and_is_documented():
     "## BENCH_analytic.json",
     "## BENCH_kernel.json",
     "## BENCH_serving.json",
+    "## BENCH_attention.json",
 ])
 def test_bench_artifact_sections_present(section):
     """CI's assertions reference these artifacts by name; the schema doc

@@ -367,12 +367,24 @@ SERVE_REPORT_BODY = textwrap.dedent("""
     assert routing["unrouted"] == 0 and routing["resolve_rate"] == 1.0
     assert routing["silent_degrades"] == 0, routing
     assert r["workload"]["covered"] == 1.0, r["workload"]
-    # every dispatch carries full plan provenance
+    # every dispatch carries full plan provenance. GEMM rows come from the
+    # warmed cache (hits); attention rows (pattn.*) resolve online from the
+    # closed-form menu, so "analytic" joins their vocabulary, and their
+    # shape is the 7-dim attention problem, not (m, n, k)
     assert r["dispatches"], "no pmm spans recorded"
+    attn_rows = [d for d in r["dispatches"] if d["name"].startswith("pattn.")]
+    assert attn_rows, "attention never routed through pattn"
     for d in r["dispatches"]:
-        assert d["provenance"] in ("hit", "bucketed", "fallback"), d
-        assert d["tag"] and len(d["shape"]) == 3, d
-        assert d["plan_digest"], d
+        if d["name"].startswith("pattn."):
+            assert d["provenance"] in ("hit", "bucketed", "analytic",
+                                       "fallback"), d
+            assert d["tag"] and len(d["shape"]) == 7, d
+            if d["provenance"] != "fallback":
+                assert d["attn_schedule"], d
+        else:
+            assert d["provenance"] in ("hit", "bucketed", "fallback"), d
+            assert d["tag"] and len(d["shape"]) == 3, d
+            assert d["plan_digest"], d
         assert d["plan_resolve_us"] >= 0 and d["dur_us"] >= 0, d
     assert r["metrics"]["counters"], r["metrics"]
     # the trace next to it is a loadable Chrome trace document
